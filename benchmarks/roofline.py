@@ -1,0 +1,69 @@
+"""Roofline table (deliverable g) — reads the dry-run artifacts.
+
+Prints per (arch × shape) the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and the roofline fraction, from
+``results/dryrun_singlepod.json`` (the single-pod mesh, per assignment).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def load(tag: str = "singlepod") -> List[Dict]:
+    path = os.path.join(RESULTS, f"dryrun_{tag}.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def roofline_rows(tag: str = "singlepod") -> List[Dict]:
+    rows = []
+    for r in sorted(load(tag), key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": r["status"],
+                         "reason": r.get("reason", "")[:60]})
+            continue
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "t_compute_ms": round(1e3 * r["t_compute_s"], 3),
+            "t_memory_ms": round(1e3 * r["t_memory_s"], 3),
+            "t_collective_ms": round(1e3 * r["t_collective_s"], 3),
+            "bottleneck": r["bottleneck"],
+            "useful_ratio": round(r["useful_ratio"], 3)
+            if r.get("useful_ratio") else None,
+            "roofline_fraction": round(r["roofline_fraction"], 4),
+            "mem_gb_per_dev": round(r["mem_per_device_gb"], 2)
+            if r.get("mem_per_device_gb") else None,
+        })
+    return rows
+
+
+def print_table(tag: str = "singlepod") -> List[Dict]:
+    rows = roofline_rows(tag)
+    if not rows:
+        print(f"(no dry-run results for {tag}; run "
+              f"`python -m repro.launch.dryrun` first)")
+        return rows
+    hdr = ("arch", "shape", "t_compute_ms", "t_memory_ms",
+           "t_collective_ms", "bottleneck", "useful_ratio",
+           "roofline_fraction", "mem_gb_per_dev")
+    print(",".join(hdr))
+    for r in rows:
+        if r["status"] != "ok":
+            print(f'{r["arch"]},{r["shape"]},SKIP/{r["status"]}')
+            continue
+        print(",".join(str(r.get(k, "")) for k in hdr))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    print_table(sys.argv[1] if len(sys.argv) > 1 else "singlepod")

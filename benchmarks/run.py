@@ -1,0 +1,81 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One function per paper table/figure (benchmarks/tables.py). For each, we
+print ``name,us_per_call,derived`` CSV (derived = the table's headline
+metric) and dump all rows to results/tables.json. The roofline table
+(deliverable g) is appended from the dry-run artifacts when present.
+"""
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from benchmarks.tables import ALL_TABLES            # noqa: E402
+from benchmarks import roofline                     # noqa: E402
+
+
+def _derived(name, rows):
+    """One headline number per table (the paper's claim)."""
+    try:
+        if name == "table_1_2":
+            dcs = next(r for r in rows if r["system"].startswith("DCS"))
+            fb60 = [r for r in rows if r.get("config_size") and
+                    r["system"].startswith("Phoenix")][1]
+            return f"fb60_throughput/dcs={fb60['completed_jobs']/dcs['completed_jobs']:.3f}"
+        if name == "table_5_6":
+            pc = [r for r in rows if "total_vs_ec2" in r]
+            return "total_vs_ec2=" + "/".join(
+                str(r["total_vs_ec2"]) for r in pc) + ";peak_vs_ec2=" + \
+                "/".join(str(r["peak_vs_ec2"]) for r in pc)
+        if name == "table_3_4" or name == "table_7_8":
+            return "saved_pct=" + "/".join(
+                str(r["saved_resources_pct"]) for r in rows)
+        if name == "fig_18":
+            return "pbj_adjust_events=" + "/".join(
+                str(r["pbj_adjust_events"]) for r in rows
+                if r["trace"] == "ipsc")
+        if name == "fig_8_9":
+            return "tokens_per_s=" + "/".join(
+                str(r["tokens_per_s"]) for r in rows)
+        if name == "ablation_preempt":
+            k = [r for r in rows if r["mode"] == "kill"]
+            c = [r for r in rows if r["mode"] == "checkpoint"]
+            return "turnaround_ckpt/kill=" + "/".join(
+                f"{ci['avg_turnaround']/ki['avg_turnaround']:.3f}"
+                for ki, ci in zip(k, c))
+    except Exception as e:              # pragma: no cover
+        return f"derived_error:{type(e).__name__}"
+    return f"rows={len(rows)}"
+
+
+def main() -> None:
+    os.makedirs("results", exist_ok=True)
+    all_rows = {}
+    print("name,us_per_call,derived")
+    for name, fn in ALL_TABLES.items():
+        t0 = time.time()
+        rows = fn()
+        dt_us = (time.time() - t0) * 1e6
+        all_rows[name] = rows
+        print(f"{name},{dt_us:.0f},{_derived(name, rows)}", flush=True)
+    # Roofline table from the dry-run artifacts.
+    t0 = time.time()
+    roof = roofline.roofline_rows("singlepod")
+    all_rows["roofline"] = roof
+    ok = [r for r in roof if r.get("status") == "ok"]
+    frac = [r["roofline_fraction"] for r in ok if r.get("roofline_fraction")]
+    derived = (f"cells={len(ok)};median_fraction="
+               f"{sorted(frac)[len(frac)//2] if frac else 'n/a'}")
+    print(f"roofline,{(time.time()-t0)*1e6:.0f},{derived}")
+    with open("results/tables.json", "w") as f:
+        json.dump(all_rows, f, indent=1)
+    print(f"# full tables -> results/tables.json "
+          f"({sum(len(v) for v in all_rows.values())} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,273 @@
+"""Benchmark functions — one per paper table/figure (§6).
+
+Every function regenerates its artifact with the synthetic moment-matched
+traces and returns a list of row dicts; ``run.py`` times each and prints
+the ``name,us_per_call,derived`` CSV plus the full tables to
+results/tables.json.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.pbj_manager import PBJPolicyParams
+from repro.sim import traces
+from repro.sim.simulator import (build_dcs, build_ec2_rightscale, build_fb,
+                                 build_flb_nub, clone_jobs, run_sim)
+
+T = traces.TWO_WEEKS
+SEED = 0
+
+
+def _workload(name: str, prc_pbj: int, prc0: int):
+    jobs = traces.nasa_ipsc(SEED) if name == "ipsc" else traces.sdsc_blue(SEED)
+    if prc_pbj != prc0:
+        jobs = traces.scale_jobs(jobs, prc_pbj, prc0)
+    return jobs
+
+
+def _ws(prc_ws: int):
+    return traces.worldcup98(SEED, peak_vms=prc_ws)
+
+
+_PRC0 = {"ipsc": 128, "blue": 144}
+
+
+def _row(r, **extra) -> Dict:
+    d = r.row()
+    d.update(extra)
+    return d
+
+
+# ---------------------------------------------------------------- Tables 1–2
+
+def table_1_2() -> List[Dict]:
+    """DCS vs PhoenixCloud-FB at shrinking configuration sizes (§6.5.3)."""
+    out = []
+    for trace in ("ipsc", "blue"):
+        prc0 = _PRC0[trace]
+        jobs, ws = _workload(trace, prc0, prc0), _ws(128)
+        dcs_size = prc0 + 128
+        out.append(_row(run_sim(build_dcs(prc0, 128), clone_jobs(jobs), ws,
+                                T, name=f"DCS({dcs_size})"), trace=trace,
+                        config_size=dcs_size))
+        for frac in (prc0 / dcs_size, 0.6, 0.75, 1.0):
+            c = int(round(dcs_size * frac))
+            out.append(_row(run_sim(build_fb(c), clone_jobs(jobs), ws, T,
+                                    name=f"PhoenixCloud({c})"),
+                            trace=trace, config_size=c))
+    return out
+
+
+# ---------------------------------------------------------------- Tables 3–4
+
+def table_3_4() -> List[Dict]:
+    """FB with varying PRC_WS/PRC_PBJ ratios (§6.5.3): saved resources
+    peak when the two peak demands are close."""
+    out = []
+    for trace in ("ipsc", "blue"):
+        prc0 = _PRC0[trace]
+        for prc_ws in (64, 128, 256):
+            jobs, ws = _workload(trace, prc0, prc0), _ws(prc_ws)
+            c = max(prc0, prc_ws)       # smallest valid configuration
+            r = run_sim(build_fb(c), clone_jobs(jobs), ws, T,
+                        name=f"FB({prc0},{prc_ws})->{c}")
+            saving = 1 - c / (prc0 + prc_ws)
+            out.append(_row(r, trace=trace, prc_ws=prc_ws, config_size=c,
+                            saved_resources_pct=round(100 * saving, 1)))
+    return out
+
+
+# ---------------------------------------------------------------- Tables 5–6
+
+def _baseline_params():
+    return PBJPolicyParams(request_threshold=1.2, release_threshold=0.2,
+                           elastic_factor=0.5)
+
+
+def table_5_6() -> List[Dict]:
+    """EC2+RightScale vs PhoenixCloud FLB-NUB (§6.6.3), baseline params
+    [B25/U1.2/V0.2/G0.5/L60] (iPSC) and [B27/...] (BLUE)."""
+    out = []
+    for trace, B in (("ipsc", 25), ("blue", 27)):
+        prc0 = _PRC0[trace]
+        jobs, ws = _workload(trace, prc0, prc0), _ws(128)
+        ec2 = run_sim(build_ec2_rightscale(), clone_jobs(jobs), ws, T,
+                      name="EC2+RightScale")
+        pc = run_sim(build_flb_nub(B - 12, 12, params=_baseline_params()),
+                     clone_jobs(jobs), ws, T, name=f"PhoenixCloud(B{B})")
+        out.append(_row(ec2, trace=trace))
+        out.append(_row(pc, trace=trace,
+                        total_vs_ec2=round(pc.node_hours / ec2.node_hours, 3),
+                        peak_vs_ec2=round(pc.peak_nodes / ec2.peak_nodes, 3)))
+    return out
+
+
+# ---------------------------------------------------------------- Tables 7–8
+
+def table_7_8() -> List[Dict]:
+    """FLB-NUB with varying PRC_WS (§6.6.3), BR0.1 rule for B."""
+    out = []
+    for trace in ("ipsc", "blue"):
+        prc0 = _PRC0[trace]
+        for prc_ws in (64, 128, 256):
+            jobs, ws = _workload(trace, prc0, prc0), _ws(prc_ws)
+            B = max(2, int(0.1 * (prc0 + prc_ws)))
+            lb_ws = min(12, B - 1)
+            r = run_sim(build_flb_nub(B - lb_ws, lb_ws,
+                                      params=_baseline_params()),
+                        clone_jobs(jobs), ws, T,
+                        name=f"FLB-NUB({prc0},{prc_ws})")
+            ideal = (prc0 + prc_ws) * T / 3600
+            out.append(_row(r, trace=trace, prc_ws=prc_ws, B=B,
+                            saved_resources_pct=round(
+                                100 * (1 - r.node_hours / ideal), 1)))
+    return out
+
+
+# ------------------------------------------------------------- Figs 14–15: B
+
+def fig_14_15() -> List[Dict]:
+    """Effect of the coordinated-pool size B (§6.6.4, J1/J2)."""
+    out = []
+    for trace in ("ipsc", "blue"):
+        prc0 = _PRC0[trace]
+        jobs, ws = _workload(trace, prc0, prc0), _ws(128)
+        for B in (13, 25, 51, 102, 154):
+            lb_ws = min(12, B - 1)
+            r = run_sim(build_flb_nub(B - lb_ws, lb_ws,
+                                      params=_baseline_params()),
+                        clone_jobs(jobs), ws, T, name=f"B={B}")
+            out.append(_row(r, trace=trace, B=B))
+    return out
+
+
+# --------------------------------------------------------- Figs 16–17: U,V,G
+
+def fig_16_17() -> List[Dict]:
+    """Effect of U (request), V (release), G (elastic factor) (§6.6.4)."""
+    out = []
+    for trace, B in (("ipsc", 25), ("blue", 27)):
+        prc0 = _PRC0[trace]
+        jobs, ws = _workload(trace, prc0, prc0), _ws(128)
+        base = dict(request_threshold=1.2, release_threshold=0.2,
+                    elastic_factor=0.5)
+        sweeps = [("U", "request_threshold", (1.0, 1.2, 1.5, 2.0)),
+                  ("V", "release_threshold", (0.1, 0.2, 0.5)),
+                  ("G", "elastic_factor", (0.25, 0.5, 0.99))]
+        for label, field, values in sweeps:
+            for v in values:
+                params = PBJPolicyParams(**{**base, field: v})
+                r = run_sim(build_flb_nub(B - 12, 12, params=params),
+                            clone_jobs(jobs), ws, T,
+                            name=f"{label}={v}")
+                out.append(_row(r, trace=trace, param=label, value=v))
+    return out
+
+
+# ---------------------------------------------------------------- Fig 18: L
+
+def fig_18() -> List[Dict]:
+    """Management overhead vs the lease time unit L (§6.6.4)."""
+    out = []
+    for trace, B in (("ipsc", 25), ("blue", 27)):
+        prc0 = _PRC0[trace]
+        jobs, ws = _workload(trace, prc0, prc0), _ws(128)
+        for minutes in (15, 30, 60, 120, 240):
+            r = run_sim(build_flb_nub(B - 12, 12, lease_seconds=60 * minutes,
+                                      params=_baseline_params()),
+                        clone_jobs(jobs), ws, T, name=f"L={minutes}min")
+            out.append(_row(r, trace=trace, lease_minutes=minutes))
+    return out
+
+
+# ------------------------------------------- Figs 8–9: serving calibration
+
+def fig_8_9() -> List[Dict]:
+    """The §6.4 live experiment, miniaturized: throughput and utilization
+    vs replica count on the real serving engine (reduced smollm)."""
+    import numpy as np
+    from repro.configs.base import get_config, reduced_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.serving.engine import Replica, Request
+
+    cfg = reduced_config(get_config("smollm_135m"))
+    mesh = make_local_mesh()
+    out = []
+    params = None
+    for n_replicas in (1, 2, 4):
+        reps = []
+        for _ in range(n_replicas):
+            r = Replica(cfg, mesh, slots=4, max_len=48, params=params)
+            params = r.params
+            reps.append(r)
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab, 8).astype(np.int32), max_new_tokens=8)
+            for i in range(4 * n_replicas * 2)]
+        t0 = time.time()
+        done = 0
+        utils = []
+        while reqs or any(r.n_active for r in reps):
+            for r in reps:
+                while reqs and r.free_slot() is not None:
+                    r.admit(reqs.pop(0))
+            utils.append(sum(r.n_active for r in reps)
+                         / sum(r.slots for r in reps))
+            for r in reps:
+                done += len(r.step())
+        dt = time.time() - t0
+        out.append({"replicas": n_replicas, "completed": done,
+                    "tokens_per_s": round(done * 8 / dt, 1),
+                    "avg_utilization": round(float(np.mean(utils)), 3)})
+    return out
+
+
+# -------------------------------------------- beyond-paper: preempt ablation
+
+def ablation_preempt() -> List[Dict]:
+    """Kill-restart (paper-faithful) vs checkpoint-preempt (ours)."""
+    out = []
+    for trace in ("ipsc", "blue"):
+        prc0 = _PRC0[trace]
+        jobs, ws = _workload(trace, prc0, prc0), _ws(128)
+        for mode, params in (("kill", PBJPolicyParams()),
+                             ("checkpoint",
+                              PBJPolicyParams(checkpoint_preempt=True))):
+            r = run_sim(build_fb(int((prc0 + 128) * 0.6), params=params),
+                        clone_jobs(jobs), ws, T, name=f"FB-{mode}")
+            out.append(_row(r, trace=trace, mode=mode))
+    return out
+
+
+ALL_TABLES = {
+    "table_1_2": table_1_2,
+    "table_3_4": table_3_4,
+    "table_5_6": table_5_6,
+    "table_7_8": table_7_8,
+    "fig_14_15": fig_14_15,
+    "fig_16_17": fig_16_17,
+    "fig_18": fig_18,
+    "fig_8_9": fig_8_9,
+    "ablation_preempt": ablation_preempt,
+}
+
+
+# ------------------------------------- beyond-paper: vmapped param sweep
+
+def jaxsim_sweep() -> List[Dict]:
+    """§6.6.4 (B/U/V/G study) as ONE vmapped jax.lax.scan program
+    (core/jaxsim.py) — 12 two-week FLB-NUB configurations batched."""
+    from repro.core import jaxsim
+    jobs = traces.nasa_ipsc(SEED)
+    ws = traces.worldcup98(SEED, peak_vms=128)
+    grid = ([{"B": b, "U": 1.2, "V": 0.2, "G": 0.5}
+             for b in (13, 25, 51, 102, 154)]
+            + [{"B": 25, "U": u, "V": 0.2, "G": 0.5} for u in (1.0, 1.5, 2.0)]
+            + [{"B": 25, "U": 1.2, "V": v, "G": 0.5} for v in (0.1, 0.5)]
+            + [{"B": 25, "U": 1.2, "V": 0.2, "G": g} for g in (0.25, 0.99)])
+    return jaxsim.sweep(grid, jobs, ws, T)
+
+
+ALL_TABLES["jaxsim_sweep"] = jaxsim_sweep

@@ -1,0 +1,45 @@
+"""The paper's full evaluation (§6) end-to-end: all four systems on both
+heterogeneous workload pairs, printing Tables 1/2/5/6-shaped output.
+
+Run:  PYTHONPATH=src python examples/consolidation_sim.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.pbj_manager import PBJPolicyParams
+from repro.sim import traces
+from repro.sim.simulator import (build_dcs, build_ec2_rightscale, build_fb,
+                                 build_flb_nub, clone_jobs, run_sim)
+
+T = traces.TWO_WEEKS
+HDR = (f"{'system':26s} {'jobs':>5s} {'exec(s)':>8s} {'turn(s)':>8s} "
+       f"{'peak':>6s} {'node-h':>9s} {'adjusts':>8s} {'kills':>6s}")
+
+for name, mk, prc0, B in (("NASA iPSC + WorldCup", traces.nasa_ipsc, 128, 25),
+                          ("SDSC BLUE + WorldCup", traces.sdsc_blue, 144, 27)):
+    jobs = mk(seed=0)
+    ws = traces.worldcup98(seed=0, peak_vms=128)
+    print(f"\n=== {name}  (PRC_PBJ={prc0}, PRC_WS=128) ===")
+    print(HDR)
+    systems = [
+        (build_dcs(prc0, 128), f"DCS({prc0+128})"),
+        (build_fb(prc0), f"PhoenixCloud-FB({prc0})"),
+        (build_fb(int((prc0+128)*0.6)), f"PhoenixCloud-FB({int((prc0+128)*0.6)})"),
+        (build_fb(int((prc0+128)*0.6),
+                  params=PBJPolicyParams(checkpoint_preempt=True)),
+         "  + checkpoint-preempt"),
+        (build_flb_nub(B-12, 12), f"PhoenixCloud-FLBNUB(B{B})"),
+        (build_ec2_rightscale(), "EC2+RightScale"),
+    ]
+    for sys_, label in systems:
+        r = run_sim(sys_, clone_jobs(jobs), ws, T, name=label)
+        print(f"{label:26s} {r.completed_jobs:5d} {r.avg_execution:8.0f} "
+              f"{r.avg_turnaround:8.0f} {r.peak_nodes:6d} {r.node_hours:9.0f} "
+              f"{r.adjust_events:8d} {r.kills:6d}")
+print("""
+Paper claims to check against the rows above (§6.7):
+ * FB at 60% of the DCS size: same completed jobs, bounded turnaround hit.
+ * FLB-NUB: lower total AND peak consumption than EC2+RightScale,
+   at a moderate turnaround premium (jobs queue until U fires).
+ * EC2+RightScale: zero queueing (exec == turnaround) but 1.5-2x the peak.
+ * checkpoint-preempt (beyond paper): same consolidation, less lost work.""")

@@ -1,0 +1,60 @@
+"""Quickstart: the PhoenixCloud pipeline in 60 lines.
+
+1. Express two runtime-environment requirements (paper Fig. 3).
+2. Let the CSF create + pair the coordinated TREs.
+3. Consolidate a batch-job trace and a web-service trace on one site
+   under the FB policy; compare against two dedicated clusters.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.lifecycle import LifecycleManagementService
+from repro.core.pbj_manager import PBJManager
+from repro.core.provision import FBProvisionService
+from repro.core.spec import (CoordinationModel, Granularity, Relationship,
+                             ResourceBounds, RuntimeEnvironmentSpec,
+                             SetupPolicy, WorkloadType)
+from repro.core.ws_manager import WSManager
+from repro.sim import traces
+from repro.sim.simulator import build_dcs, clone_jobs, run_sim
+
+# 1. Runtime-environment specifications.
+pbj_spec = RuntimeEnvironmentSpec(
+    name="dept_batch", relationship=Relationship.AFFILIATED,
+    workload=WorkloadType.PARALLEL_BATCH_JOBS,
+    granularity=Granularity.CHIP_SLICE, coordination=CoordinationModel.FB,
+    bounds=ResourceBounds(153, 153), setup_policy=SetupPolicy.RELOAD,
+    arch="smollm_135m")
+ws_spec = RuntimeEnvironmentSpec(
+    name="dept_serving", relationship=Relationship.AFFILIATED,
+    workload=WorkloadType.WEB_SERVICE,
+    granularity=Granularity.CHIP_SLICE, coordination=CoordinationModel.FB,
+    bounds=ResourceBounds(0, 0), arch="smollm_135m")
+print("PBJ spec XML:\n " + pbj_spec.to_xml()[:120] + "...\n")
+
+# 2. CSF lifecycle: create, deploy, pair, activate.
+csf = LifecycleManagementService()
+csf.create(pbj_spec)
+csf.create(ws_spec)
+print(f"coordinated pair: {csf.tre('dept_batch').partner!r} <-> "
+      f"{csf.tre('dept_serving').partner!r}\n")
+pbj, ws = PBJManager(), WSManager()
+csf.activate("dept_batch", pbj)
+csf.activate("dept_serving", ws)
+
+# 3. Consolidation vs dedicated clusters.
+T = traces.TWO_WEEKS
+jobs = traces.nasa_ipsc(seed=0)
+ws_trace = traces.worldcup98(seed=0, peak_vms=128)
+fb = run_sim(FBProvisionService(153, pbj, ws), clone_jobs(jobs), ws_trace,
+             T, name="PhoenixCloud-FB(153)")
+dcs = run_sim(build_dcs(128, 128), clone_jobs(jobs), ws_trace, T,
+              name="DCS(256)")
+for r in (dcs, fb):
+    print(f"{r.system:22s} jobs={r.completed_jobs:5d} "
+          f"turnaround={r.avg_turnaround:7.0f}s peak={r.peak_nodes:4d} "
+          f"node_hours={r.node_hours:9.0f}")
+print(f"\n=> same throughput with a {1-153/256:.0%} smaller site "
+      f"(the paper's §6.5 claim).")

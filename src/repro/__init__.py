@@ -1,0 +1,15 @@
+"""PhoenixCloud on TPU — coordinated provisioning for heterogeneous ML
+workloads (Zhan et al., 2010), as a multi-pod JAX framework.
+
+Public surface:
+  repro.core     — the paper (RE specs, CSF, FB/FLB-NUB, TRE managers)
+  repro.sim      — trace-driven evaluation (paper §6)
+  repro.configs  — the 10 assigned architectures (get_config / ARCH_IDS)
+  repro.models   — composable model assembly (Model)
+  repro.kernels  — Pallas TPU kernels (flash attention/decode, SSD)
+  repro.train    — optimizer/data/checkpoint/compression/trainer
+  repro.serving  — continuous-batching engine + autoscaler
+  repro.launch   — production mesh, dry-run, CLIs
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+from repro.configs.base import (ARCH_IDS, ArchConfig, LayerSpec, ShapeSpec,
+                                all_configs, get_config, reduced_config)
+
+__all__ = ["ARCH_IDS", "ArchConfig", "LayerSpec", "ShapeSpec",
+           "all_configs", "get_config", "reduced_config"]

@@ -1,0 +1,142 @@
+"""Runtime bridge — PhoenixCloud TREs driving *real* JAX payloads.
+
+The simulator (``repro.sim``) exercises the provisioning policies against
+traces; this bridge exercises them against actual work: PBJ jobs run
+``TrainJob`` steps, WS replicas run the serving engine, and the
+ResourceProvisionService moves *logical chip leases* between them. On the
+CPU container every logical chip maps to the same physical device — the
+provisioning layer is deliberately agnostic to that mapping (it tracks
+leases, not devices), exactly as the paper's provision service tracks
+nodes, not their MAC addresses.
+
+This is what ``examples/consolidation_live.py`` runs end-to-end: a live
+FB-policy cloud where a serving spike force-preempts (checkpoint, not
+kill — the beyond-paper mode) a training job and the job later resumes
+from its checkpoint on the recovered chips.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core.jobs import Job
+from repro.core.lifecycle import LifecycleManagementService, TREState
+from repro.core.pbj_manager import PBJManager, PBJPolicyParams
+from repro.core.provision import FBProvisionService
+from repro.core.spec import (CoordinationModel, Granularity,
+                             Relationship, ResourceBounds,
+                             RuntimeEnvironmentSpec, SetupPolicy,
+                             WorkloadType)
+from repro.core.ws_manager import WSManager
+from repro.train.trainer import TrainJob, TrainJobConfig
+
+
+@dataclasses.dataclass
+class LiveJob:
+    """A PBJ queue entry bound to a real TrainJob payload."""
+
+    job: Job
+    payload: TrainJob
+    steps_per_grant: int = 10
+
+
+class LiveCloud:
+    """A miniature live PhoenixCloud site under the FB policy.
+
+    Chips are logical lease tokens (capacity C); the PBJ TRE runs real
+    training steps whenever it holds >= job.size chips; the WS TRE's
+    demand is driven by the serving autoscaler (or a replayed trace).
+    Preemption uses checkpoint-preempt: the payload checkpoints and the
+    queue entry keeps its progress.
+    """
+
+    def __init__(self, capacity: int, mesh, *, lease_seconds: float = 60.0,
+                 checkpoint_root: str = "/tmp/phoenixcloud_ckpt"):
+        self.mesh = mesh
+        self.lifecycle = LifecycleManagementService()
+        params = PBJPolicyParams(checkpoint_preempt=True)
+        self.pbj = PBJManager(params=params)
+        self.ws = WSManager()
+        self.service = FBProvisionService(capacity, self.pbj, self.ws,
+                                          lease_seconds)
+        self.checkpoint_root = checkpoint_root
+        self._live: Dict[int, LiveJob] = {}
+        self._register_tres(capacity)
+        self.t = 0.0
+        self.service.startup(0.0, ws_initial=0)
+
+    def _register_tres(self, capacity: int) -> None:
+        pbj_spec = RuntimeEnvironmentSpec(
+            name="pbj_tre", relationship=Relationship.AFFILIATED,
+            workload=WorkloadType.PARALLEL_BATCH_JOBS,
+            granularity=Granularity.CHIP_SLICE,
+            coordination=CoordinationModel.FB,
+            bounds=ResourceBounds(capacity, capacity),
+            setup_policy=SetupPolicy.RELOAD)
+        ws_spec = dataclasses.replace(
+            pbj_spec, name="ws_tre", workload=WorkloadType.WEB_SERVICE)
+        self.lifecycle.create(pbj_spec)
+        self.lifecycle.create(ws_spec)
+        self.lifecycle.activate("pbj_tre", self.pbj)
+        self.lifecycle.activate("ws_tre", self.ws)
+        assert self.lifecycle.tre("pbj_tre").partner == "ws_tre"
+
+    # --------------------------------------------------------------- API
+
+    def submit_training(self, jid: int, arch: str, chips: int,
+                        steps: int = 30, batch: int = 4,
+                        seq_len: int = 64) -> None:
+        cfg = get_config(arch)
+        from repro.configs.base import reduced_config
+        rcfg = reduced_config(cfg)
+        payload = TrainJob(rcfg, TrainJobConfig(
+            arch=arch, steps=steps, batch=batch, seq_len=seq_len,
+            checkpoint_dir=f"{self.checkpoint_root}/job{jid}",
+            checkpoint_every=10), self.mesh)
+        job = Job(jid=jid, submit=self.t, size=chips,
+                  runtime=float(steps))   # runtime in steps (bridge units)
+        self._live[jid] = LiveJob(job, payload)
+        self.pbj.submit(self.t, job)
+
+    def set_ws_demand(self, demand: int) -> None:
+        self.service.on_ws_demand(self.t, demand)
+
+    def lease_tick(self) -> None:
+        self.t += self.service.lease_seconds
+        self.service.on_lease_tick(self.t)
+
+    def run_quantum(self, steps: int = 10) -> List[int]:
+        """Run every currently-scheduled live job for ``steps`` train
+        steps (the bridge's time quantum); returns finished jids."""
+        finished = []
+        for jid in list(self._live):
+            lj = self._live[jid]
+            if lj.job.jid not in self.pbj.running:
+                continue   # queued or preempted
+            payload = lj.payload
+            target = min(payload.jc.steps, payload.step + steps)
+            saved = payload.jc.steps
+            payload.jc.steps = target
+            payload.run()
+            payload.jc.steps = saved
+            lj.job.progress = float(payload.step)
+            if payload.step >= saved:
+                self.pbj.on_finish(self.t, jid,
+                                   self.pbj._epochs.get(jid, -1))
+                finished.append(jid)
+                del self._live[jid]
+        return finished
+
+    def preempt_for_ws(self, demand: int) -> None:
+        """A WS spike: checkpoint-preempt whatever must be killed."""
+        victims_before = set(self.pbj.running.jobs() and
+                             [j.jid for j in self.pbj.running.jobs()])
+        self.set_ws_demand(demand)
+        victims_after = {j.jid for j in self.pbj.running.jobs()}
+        for jid in victims_before - victims_after:
+            if jid in self._live:
+                self._live[jid].payload.checkpoint(block=True)

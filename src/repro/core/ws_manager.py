@@ -1,0 +1,80 @@
+"""WS TRE Manager — the web-service (inference-serving) runtime environment.
+
+Two operating modes mirror the paper's two experiment styles:
+
+  * **Demand replay** (§6.5.1 "the resource simulator simulates the varying
+    resources consumption and drives WS Manager"): the manager replays a
+    resource-consumption trace (e.g. the World Cup trace of Fig. 10) and
+    requests/releases nodes from the provision service to match.
+
+  * **Instance adjustment** (§6.4): the live policy used by the real
+    serving engine — if average utilization of the current ``n`` instances
+    exceeds 80% over the sampling window, add one instance; if it drops
+    below 80%·(n−1)/n, remove one. On the TPU adaptation "utilization" is
+    decode-slot occupancy of the serving replicas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceAdjustmentPolicy:
+    """§6.4's policy, parameters verbatim from the paper."""
+
+    threshold: float = 0.80      # utilization trigger
+    window_seconds: float = 20.0  # averaging window
+    initial_instances: int = 2
+    min_instances: int = 1
+    nodes_per_instance: int = 1
+
+    def decide(self, n_instances: int, avg_utilization: float) -> int:
+        """Return the instance-count delta (+1 / -1 / 0)."""
+        if avg_utilization > self.threshold:
+            return 1
+        if (n_instances > self.min_instances
+                and avg_utilization < self.threshold * (n_instances - 1) / n_instances):
+            return -1
+        return 0
+
+
+class WSManager:
+    """Manager of the web-service TRE."""
+
+    def __init__(self, name: str = "WS",
+                 policy: InstanceAdjustmentPolicy = InstanceAdjustmentPolicy()):
+        self.name = name
+        self.policy = policy
+        self.instances = policy.initial_instances
+        self.demand = 0          # nodes currently demanded (replay mode)
+        self._util_samples: List[Tuple[float, float]] = []
+
+    # ------------------------------------------------------- replay mode
+
+    def set_demand(self, demand: int) -> int:
+        """Replay-mode update; returns the delta the service must cover."""
+        delta = demand - self.demand
+        self.demand = demand
+        return delta
+
+    # ----------------------------------------------- live-adjustment mode
+
+    def observe_utilization(self, t: float, utilization: float) -> Optional[int]:
+        """Feed a utilization sample; returns new instance count on change."""
+        self._util_samples.append((t, utilization))
+        w = self.policy.window_seconds
+        self._util_samples = [(ts, u) for ts, u in self._util_samples
+                              if ts >= t - w]
+        avg = sum(u for _, u in self._util_samples) / len(self._util_samples)
+        delta = self.policy.decide(self.instances, avg)
+        if delta != 0:
+            self.instances += delta
+            self._util_samples.clear()   # restart the window after a change
+            return self.instances
+        return None
+
+    @property
+    def nodes_needed(self) -> int:
+        return self.instances * self.policy.nodes_per_instance

@@ -1,0 +1,138 @@
+"""Flash attention forward — Pallas TPU kernel.
+
+TPU-native adaptation: the online-softmax accumulator lives in VMEM
+scratch that persists across the innermost (sequential) grid dimension;
+block shapes are MXU-aligned (multiples of 128 on the contraction dims).
+Supports causal masking, sliding-window (gemma2 local layers), logit
+softcap (gemma2), and GQA via a head→kv-head index map — no KV
+duplication in HBM.
+
+Layout contract: q (B*KV*G, S, hd) where G = n_heads // n_kv_heads and
+consecutive G rows share one kv head; k/v (B*KV, S, hd).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_k: int, causal: bool,
+                  window: Optional[int], softcap: Optional[float],
+                  seq_len: int, scale: float, q_offset: int):
+    """``seq_len`` is the KV extent; query row i sits at absolute position
+    ``q_offset + qi·block_q + i`` (rectangular q/kv supports decode)."""
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        v = v_ref[0].astype(jnp.float32)
+        # Zero padded KV rows: out-of-bounds block reads are undefined
+        # (NaN in interpret mode) and 0·NaN would poison the p·V dot.
+        kvalid = kj * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_k, 1), 0) < seq_len
+        v = jnp.where(kvalid, v, 0.0)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    if causal:
+        # Skip fully-masked blocks (upper triangle / outside the window).
+        q_max = q_offset + qi * block_q + block_q - 1
+        k_min = kj * block_k
+        needed = k_min <= q_max
+        if window is not None:
+            k_max = kj * block_k + block_k - 1
+            needed &= k_max > q_max - block_q - window + 1
+        pl.when(needed)(_compute)
+    else:
+        _compute()
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bkv(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        block_q: int = 128, block_k: int = 128,
+                        q_offset: int = 0,
+                        interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, hd) with BH = B*KV*G; k/v: (BKV, Skv, hd).
+
+    Rectangular q/kv: ``Sq == Skv`` for training/prefill; ``Sq == 1`` with
+    ``q_offset = position`` is the flash-decode step (the KV cache never
+    leaves VMEM-blocked streaming — no score materialization in HBM).
+    """
+    bh, sq, hd = q.shape
+    bkv, skv, _ = k.shape
+    g = bh // bkv
+    scale = 1.0 / np.sqrt(hd)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    nq = pl.cdiv(sq, block_q)
+    nk = pl.cdiv(skv, block_k)
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, causal=causal,
+        window=window, softcap=softcap, seq_len=skv, scale=scale,
+        q_offset=q_offset)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b // g, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

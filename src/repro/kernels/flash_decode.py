@@ -1,0 +1,102 @@
+"""Flash-decode — single-token attention against a (B·KV, S, hd) cache.
+
+The serving hot loop: one query token per sequence attends to a 32k–512k
+KV cache. The kernel streams the cache through VMEM in ``block_k`` tiles
+with an online-softmax accumulator held in VMEM scratch; scores never
+touch HBM, and the write position ``pos`` is a scalar-prefetch operand so
+decode steps never recompile. HBM traffic per layer ≈ one cache read —
+the bandwidth-bound ideal (see EXPERIMENTS.md §Perf cell A).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, block_k: int, window: Optional[int],
+                   softcap: Optional[float], kv_len: int, scale: float):
+    kj = pl.program_id(1)
+    nk = pl.num_programs(1)
+    pos = pos_ref[0]
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (1, block_k), 1)[0]
+    valid = (k_pos <= pos) & (k_pos < kv_len)
+    if window is not None:
+        valid &= k_pos > pos - window
+
+    @pl.when(kj * block_k <= pos)          # skip fully-future blocks
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (G, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (block_k, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(valid[None, :], s, NEG_INF)         # (G, block_k)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        v = jnp.where(valid[:, None], v_ref[0].astype(jnp.float32), 0.0)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1)
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode_bkv(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array, *, window: Optional[int] = None,
+                     softcap: Optional[float] = None, block_k: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: (BKV, G, hd) one token per row-group; k/v: (BKV, S, hd);
+    pos: () int32 — the current absolute position (cache write index)."""
+    bkv, g, hd = q.shape
+    _, s, _ = k.shape
+    block_k = min(block_k, s)
+    nk = pl.cdiv(s, block_k)
+    kernel = functools.partial(
+        _decode_kernel, block_k=block_k, window=window, softcap=softcap,
+        kv_len=s, scale=1.0 / np.sqrt(hd))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda b, j, pos_ref: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, j, pos_ref: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, j, pos_ref: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda b, j, pos_ref: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(pos[None].astype(jnp.int32), q, k, v)

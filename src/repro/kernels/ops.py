@@ -1,0 +1,93 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These expose model-layout entry points (``flash_attention`` over
+(b, s, h, hd) tensors; ``ssd`` over (b, l, h, p) + grouped B/C) and fold
+them into the kernel layouts. ``interpret`` defaults to True on CPU
+(validation mode) and False on TPU (the real kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bkv
+from repro.kernels.flash_decode import flash_decode_bkv
+from repro.kernels.ssd_scan import ssd_scan_bh
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Model layout: q (b, s, h, hd); k/v (b, s, kv, hd) → (b, s, h, hd)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    # (b, s, kv, g, hd) → (b*kv*g, s, hd); consecutive g rows share a kv head.
+    qk = q.reshape(b, s, kv, g, hd).transpose(0, 2, 3, 1, 4) \
+        .reshape(b * kv * g, s, hd)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    vk = v.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    out = flash_attention_bkv(qk, kk, vk, causal=causal, window=window,
+                              softcap=softcap, block_q=block_q,
+                              block_k=block_k, interpret=interpret)
+    return out.reshape(b, kv, g, s, hd).transpose(0, 3, 1, 2, 4) \
+        .reshape(b, s, h, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap",
+                                             "block_k", "interpret"))
+def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 pos: jax.Array, *, window: Optional[int] = None,
+                 softcap: Optional[float] = None, block_k: int = 512,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Serving layout: q (b, 1, h, hd); k/v cache (b, kv, s, hd);
+    pos () int32. Returns (b, 1, h, hd)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    b, one, h, hd = q.shape
+    kv = k_cache.shape[1]
+    g = h // kv
+    qf = q.reshape(b, kv, g, hd).reshape(b * kv, g, hd)
+    kf = k_cache.reshape(b * kv, k_cache.shape[2], hd)
+    vf = v_cache.reshape(b * kv, v_cache.shape[2], hd)
+    out = flash_decode_bkv(qf, kf, vf, pos, window=window, softcap=softcap,
+                           block_k=block_k, interpret=interpret)
+    return out.reshape(b, kv, g, hd).reshape(b, 1, h, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array, *,
+        init_state: Optional[jax.Array] = None, chunk: int = 128,
+        interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    """Model layout: x (b, l, h, p); a (b, l, h); B/C (b, l, g, n);
+    init_state (b, h, p, n). Returns (y (b,l,h,p), state (b,h,p,n))."""
+    if interpret is None:
+        interpret = _default_interpret()
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2).transpose(0, 2, 1, 3).reshape(b * h, l, n)
+    Ch = jnp.repeat(C, rep, axis=2).transpose(0, 2, 1, 3).reshape(b * h, l, n)
+    xf = x.transpose(0, 2, 1, 3).reshape(b * h, l, p)
+    af = a.transpose(0, 2, 1).reshape(b * h, l)
+    s0 = None if init_state is None else \
+        init_state.reshape(b * h, p, n).astype(jnp.float32)
+    y, sT = ssd_scan_bh(xf, af, Bh, Ch, s0=s0, chunk=chunk,
+                        interpret=interpret)
+    return (y.reshape(b, h, l, p).transpose(0, 2, 1, 3),
+            sT.reshape(b, h, p, n))

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are *independent* straight-line implementations (no online softmax,
+no chunking tricks) used by the kernel test sweeps; the model code paths
+(`models.attention._sdpa`, `models.mamba2.ssd_chunked`) are separately
+cross-checked against these same oracles.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        softcap: Optional[float] = None) -> jax.Array:
+    """q: (BH, S, hd); k/v: (BKV, S, hd); GQA via row grouping."""
+    bh, s, hd = q.shape
+    bkv = k.shape[0]
+    g = bh // bkv
+    qg = q.reshape(bkv, g, s, hd).astype(jnp.float32)
+    scores = jnp.einsum("bgsd,btd->bgst", qg,
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgst,btd->bgsd", probs, v.astype(jnp.float32))
+    return out.reshape(bh, s, hd).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array,
+            s0: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential (token-by-token) SSD recurrence — the ground truth.
+
+    x: (BH, L, P); a: (BH, L) log-decay; B, C: (BH, L, N); s0: (BH, P, N).
+    h_t = exp(a_t) h_{t-1} + x_t B_t^T ;  y_t = h_t C_t
+    """
+    bh, l, p = x.shape
+    n = B.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((bh, p, n), jnp.float32)
+
+    def step(h, inp):
+        xt, at, Bt, Ct = inp
+        h = jnp.exp(at)[:, None, None] * h \
+            + xt[..., :, None].astype(jnp.float32) * Bt[..., None, :]
+        y = jnp.einsum("bpn,bn->bp", h, Ct)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2), a.astype(jnp.float32).transpose(1, 0),
+          B.astype(jnp.float32).transpose(1, 0, 2),
+          C.astype(jnp.float32).transpose(1, 0, 2))
+    hT, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype), hT

@@ -1,0 +1,100 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+The chunk-local work is three MXU-friendly matmuls ((Q,Q)·(Q,P),
+(N,Q)·(Q,P), (Q,N)·(N,P)); the inter-chunk recurrence is carried in a
+(P, N) fp32 VMEM scratch that persists across the innermost (sequential)
+chunk grid dimension — the TPU-native replacement for the GPU kernel's
+warp-level scan.
+
+Layout contract: x (BH, L, P); a (BH, L); B, C (BH, L, N) — the caller
+broadcasts groups to heads and folds batch×heads into the leading dim.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, s0_ref, y_ref, sT_ref,
+                state_ref, *, chunk: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    a = a_ref[0].astype(jnp.float32)          # (Q,)
+    B = b_ref[0].astype(jnp.float32)          # (Q, N)
+    C = c_ref[0].astype(jnp.float32)          # (Q, N)
+
+    a_cum = jnp.cumsum(a)                     # (Q,)
+    # Intra-chunk: L[i, j] = exp(a_cum[i] - a_cum[j]) for i >= j.
+    seg = a_cum[:, None] - a_cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    y = jax.lax.dot_general(cb * L, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, P)
+    # Off-diagonal: contribution of the carried state.
+    state = state_ref[...]                                        # (P, N)
+    decay_out = jnp.exp(a_cum)                                    # (Q,)
+    y += decay_out[:, None] * jax.lax.dot_general(
+        C, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                       # (Q, P)
+    y_ref[0] = y.astype(y_ref.dtype)
+    # State update: S' = S * exp(sum a) + sum_i exp(a_cum[-1]-a_cum[i]) x_i B_i^T
+    total = a_cum[-1]
+    w = jnp.exp(total - a_cum)                                    # (Q,)
+    xB = jax.lax.dot_general(x * w[:, None], B, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[...] = state * jnp.exp(total) + xB
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        sT_ref[0] = state_ref[...].astype(sT_ref.dtype)
+
+
+def ssd_scan_bh(x: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array,
+                s0: Optional[jax.Array] = None, chunk: int = 128,
+                interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (BH, L, P); a: (BH, L); B, C: (BH, L, N); s0: (BH, P, N)."""
+    bh, l, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, l)
+    nc = pl.cdiv(l, chunk)
+    assert nc * chunk == l, (l, chunk)
+    if s0 is None:
+        s0 = jnp.zeros((bh, p, n), jnp.float32)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, p, n), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, p, n), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, l, p), x.dtype),
+            jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, a, B, C, s0)
+    return y, sT

@@ -1,0 +1,226 @@
+"""(architecture × input-shape × mesh) cell construction.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, no device allocation); ``lower_cell``
+builds the jitted entry point (train_step / prefill / serve_step) with
+explicit in/out shardings and lowers it — the workhorse of the multi-pod
+dry-run (deliverable e) and the roofline benchmarks (deliverable g).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec, get_config
+from repro.models.transformer import Model
+from repro.train.optimizer import get_optimizer
+from repro.train.trainer import batch_pspecs, make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Any                    # jitted function (with shardings)
+    args: Tuple                # ShapeDtypeStruct pytrees
+    skip: Optional[str] = None
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec,
+                compute_dtype=jnp.bfloat16) -> Dict[str, SDS]:
+    """ShapeDtypeStruct stand-ins for the *data* inputs of a cell."""
+    gb, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": SDS((gb, s), jnp.int32),
+               "labels": SDS((gb, s), jnp.int32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": SDS((gb, s), jnp.int32)}
+    else:   # decode: one new token against a seq_len cache
+        out = {"tokens": SDS((gb, 1), jnp.int32)}
+    if cfg.family in ("vlm", "audio") and shape.kind != "decode":
+        out["frontend"] = SDS((gb, cfg.frontend_len, cfg.d_model),
+                              compute_dtype)
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh,
+               compute_dtype=jnp.bfloat16) -> Cell:
+    cfg = get_config(arch)
+    shape = cfg.shapes()[shape_name]
+    if shape.skip:
+        return Cell(arch, shape_name, shape.kind, None, (), skip=shape.skip)
+    gb = shape.global_batch
+
+    if shape.kind == "train":
+        model = Model(cfg, mesh, compute_dtype=compute_dtype,
+                      param_dtype=jnp.float32)
+        opt = get_optimizer(cfg.optimizer)
+        mb = min(cfg.microbatch or gb, gb)
+        accum = max(1, gb // mb)
+        pspecs = model.param_specs()
+        step = make_train_step(model, opt, accum_steps=accum,
+                               grad_pspecs=pspecs)
+        params_sh = jax.eval_shape(lambda: model.init(0))
+        opt_sh = jax.eval_shape(opt.init, params_sh)
+        ospecs = opt.state_specs(pspecs)
+        batch_sh = input_specs(cfg, shape, compute_dtype)
+        bspecs = batch_pspecs(cfg, model.ax)
+        if "frontend" in batch_sh and "frontend" not in bspecs:
+            bspecs["frontend"] = P(model.ax.batch_axes, None, None)
+        fn = jax.jit(
+            step,
+            in_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs),
+                          _ns(mesh, bspecs), NamedSharding(mesh, P())),
+            out_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs), None),
+            donate_argnums=(0, 1),
+        )
+        args = (params_sh, opt_sh, batch_sh, SDS((), jnp.float32))
+        return Cell(arch, shape_name, "train", fn, args)
+
+    # Serving cells: bf16 params.
+    model = Model(cfg, mesh, compute_dtype=compute_dtype,
+                  param_dtype=jnp.bfloat16)
+    params_sh = jax.eval_shape(lambda: model.init(0))
+    pspecs = model.param_specs()
+
+    ax = model.ax
+    if shape.kind == "prefill":
+        cache_sh = jax.eval_shape(
+            lambda: model.init_cache(gb, shape.seq_len, dtype=jnp.bfloat16))
+        cspecs = model.cache_pspecs(cache_sh)
+        batch_sh = input_specs(cfg, shape, compute_dtype)
+        bspecs = {"tokens": ax.spec((ax.batch_axes, None), (gb, shape.seq_len))}
+        if "frontend" in batch_sh:
+            bspecs["frontend"] = ax.spec(
+                (ax.batch_axes, None, None), batch_sh["frontend"].shape)
+        fn = jax.jit(
+            model.prefill,
+            in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs),
+                          _ns(mesh, cspecs)),
+            out_shardings=(None, _ns(mesh, cspecs)),
+            donate_argnums=(2,),
+        )
+        return Cell(arch, shape_name, "prefill", fn,
+                    (params_sh, batch_sh, cache_sh))
+
+    # decode: serve_step with a filled cache of seq_len.
+    cache_sh = jax.eval_shape(
+        lambda: model.init_cache(gb, shape.seq_len, dtype=jnp.bfloat16))
+    cspecs = model.cache_pspecs(cache_sh)
+    tok_sh = {"tokens": SDS((gb, 1), jnp.int32)}
+    fn = jax.jit(
+        model.decode,
+        in_shardings=(_ns(mesh, pspecs),
+                      NamedSharding(mesh, ax.spec((ax.batch_axes, None),
+                                                  (gb, 1))),
+                      _ns(mesh, cspecs), NamedSharding(mesh, P())),
+        out_shardings=(None, _ns(mesh, cspecs)),
+        donate_argnums=(2,),
+    )
+    args = (params_sh, tok_sh["tokens"], cache_sh, SDS((), jnp.int32))
+    return Cell(arch, shape_name, "decode", fn, args)
+
+
+def lower_cell(cell: Cell):
+    assert cell.fn is not None, f"cell {cell.arch}/{cell.shape} is skipped"
+    return cell.fn.lower(*cell.args)
+
+
+# ------------------------------------------------------- analytic cost path
+
+def analytic_cost(arch: str, shape_name: str,
+                  compute_dtype=jnp.bfloat16) -> Dict[str, float]:
+    """Global FLOPs/bytes of one cell, counted honestly.
+
+    XLA's ``cost_analysis`` reports per-device numbers and counts
+    while-loop bodies ONCE, so scanned-layer models are undercounted by
+    ~n_periods×. This path lowers the same math with python-unrolled
+    layers on a single (abstract) device — no allocation, no while loops —
+    and scales the microbatch gradient cost by the accumulation count.
+    Remat recompute is included (the unrolled path keeps jax.checkpoint).
+    """
+    cfg = get_config(arch)
+    shape = cfg.shapes()[shape_name]
+    if shape.skip:
+        return {}
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh()
+    gb = shape.global_batch
+    period = len(cfg.layer_pattern())
+
+    def cost_of(fn, *args):
+        from repro.models.attention import force_dense
+        with force_dense():
+            compiled = jax.jit(fn).lower(*args).compile()
+        c = compiled.cost_analysis()
+        if isinstance(c, (list, tuple)):
+            c = c[0]
+        return (float(c.get("flops", 0.0)),
+                float(c.get("bytes accessed", 0.0)))
+
+    def cell_cost(n_periods: int):
+        """Cost of the cell at a reduced depth (fused, unsharded, global)."""
+        small = dataclasses.replace(cfg, n_layers=n_periods * period,
+                                    encoder_layers=min(
+                                        cfg.encoder_layers, n_periods))
+        if shape.kind == "train":
+            model = Model(small, mesh, compute_dtype=compute_dtype,
+                          unroll=True)
+            mb = min(cfg.microbatch or gb, gb)
+            params_sh = jax.eval_shape(lambda: model.init(0))
+            mb_shape = dataclasses.replace(shape, global_batch=mb)
+            batch_sh = input_specs(small, mb_shape, compute_dtype)
+
+            def grad_step(p, b):
+                return jax.value_and_grad(model.loss)(p, b)
+
+            return cost_of(grad_step, params_sh, batch_sh)
+        model = Model(small, mesh, compute_dtype=compute_dtype,
+                      param_dtype=jnp.bfloat16, unroll=True)
+        params_sh = jax.eval_shape(lambda: model.init(0))
+        cache_sh = jax.eval_shape(
+            lambda: model.init_cache(gb, shape.seq_len, dtype=jnp.bfloat16))
+        if shape.kind == "prefill":
+            batch_sh = input_specs(small, shape, compute_dtype)
+            return cost_of(model.prefill, params_sh, batch_sh, cache_sh)
+        return cost_of(model.decode, params_sh, SDS((gb, 1), jnp.int32),
+                       cache_sh, SDS((), jnp.int32))
+
+    # Linear extrapolation in depth: cost(N) = cost(1) + (N-1)·Δ where
+    # Δ = cost(2) − cost(1). Exact for depth-uniform models (all of ours),
+    # and keeps unsharded compile times flat across the 40-cell grid.
+    f1, b1 = cell_cost(1)
+    f2, b2 = cell_cost(2)
+    n = cfg.n_periods
+    flops = f1 + (f2 - f1) * (n - 1)
+    byts = b1 + (b2 - b1) * (n - 1)
+    if shape.kind == "train":
+        mb = min(cfg.microbatch or gb, gb)
+        accum = max(1, gb // mb)
+        flops *= accum
+        byts *= accum
+        opt = get_optimizer(cfg.optimizer)
+        model = Model(cfg, mesh, compute_dtype=compute_dtype)
+        params_sh = jax.eval_shape(lambda: model.init(0))
+        opt_sh = jax.eval_shape(opt.init, params_sh)
+
+        def opt_step(g, s, p):
+            return opt.update(g, s, p, jnp.float32(1e-4))
+
+        f_opt, b_opt = cost_of(opt_step, params_sh, opt_sh, params_sh)
+        flops += f_opt
+        byts += b_opt
+    return {"flops": flops, "bytes": byts}

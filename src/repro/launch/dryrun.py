@@ -1,0 +1,139 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture × input shape) cell against the
+production meshes — 16×16 (one pod, 256 chips) and 2×16×16 (two pods,
+512 chips) — and records memory/cost/collective analysis per cell to
+``results/dryrun_<mesh>.json`` for EXPERIMENTS.md §Dry-run and the
+roofline benchmarks.
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count at first init); do not move it.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--multi-pod] \
+        [--arch gemma2_2b] [--shape train_4k] [--out results/]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.launch import hlo_analysis
+from repro.launch.cells import build_cell, lower_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch: str, shape_name: str, mesh, chips: int) -> dict:
+    cfg = get_config(arch)
+    shape = cfg.shapes()[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+           "chips": chips, "status": None}
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape_name, mesh)
+        if cell.skip:
+            rec["status"] = "skip"
+            rec["reason"] = cell.skip
+            rec["seconds"] = round(time.time() - t0, 1)
+            return rec
+        lowered = lower_cell(cell)
+        compiled = lowered.compile()
+        from repro.launch.cells import analytic_cost
+        try:
+            ana = analytic_cost(arch, shape_name)
+        except Exception as e:
+            ana = {}
+            rec["analytic_error"] = f"{type(e).__name__}: {e}"
+        roof = hlo_analysis.analyze(
+            arch, shape_name, lowered, compiled, chips,
+            model_flops=hlo_analysis.model_flops_estimate(cfg, shape),
+            flops_override=ana.get("flops"),
+            bytes_override=ana.get("bytes"))
+        cost_raw = compiled.cost_analysis()
+        if isinstance(cost_raw, (list, tuple)):
+            cost_raw = cost_raw[0]
+        rec["xla_flops_per_device_raw"] = float(cost_raw.get("flops", 0.0))
+        rec["xla_bytes_per_device_raw"] = float(
+            cost_raw.get("bytes accessed", 0.0))
+        rec.update(roof.row())
+        rec["coll_detail"] = {k: v for k, v in roof.coll_detail.items()
+                              if k != "_counts"}
+        rec["coll_counts"] = roof.coll_detail.get("_counts", {})
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                "argument_size_gb": ma.argument_size_in_bytes / 2**30,
+                "output_size_gb": ma.output_size_in_bytes / 2**30,
+                "temp_size_gb": ma.temp_size_in_bytes / 2**30,
+                "generated_code_size_mb":
+                    ma.generated_code_size_in_bytes / 2**20,
+            }
+        except Exception as e:                       # backend-dependent
+            rec["memory_analysis"] = f"unavailable: {e}"
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["seconds"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, \
+        f"dry-run expects 512 placeholder devices, got {len(jax.devices())}"
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    chips = mesh.size if not args.multi_pod else mesh.size
+    tag = "multipod" if args.multi_pod else "singlepod"
+    # Single-pod mesh uses 256 of the 512 placeholder devices.
+    chips = 512 if args.multi_pod else 256
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else \
+        ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, f"dryrun_{tag}.json")
+    results = []
+    if os.path.exists(path):
+        with open(path) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"]) for r in results if r["status"] == "ok"}
+
+    for arch in archs:
+        for shape in shapes:
+            if (arch, shape) in done:
+                continue
+            rec = run_cell(arch, shape, mesh, chips)
+            results = [r for r in results
+                       if not (r["arch"] == arch and r["shape"] == shape)]
+            results.append(rec)
+            status = rec["status"]
+            extra = rec.get("reason", rec.get("error", ""))
+            print(f"[{tag}] {arch:22s} {shape:12s} {status:5s} "
+                  f"{rec['seconds']:7.1f}s  {extra[:80]}", flush=True)
+            with open(path, "w") as f:
+                json.dump(results, f, indent=1)
+
+    ok = sum(r["status"] == "ok" for r in results)
+    skip = sum(r["status"] == "skip" for r in results)
+    fail = sum(r["status"] == "fail" for r in results)
+    print(f"[{tag}] done: {ok} ok / {skip} skip / {fail} fail → {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,229 @@
+"""Compiled-artifact analysis: roofline terms from HLO.
+
+Sources:
+  * ``compiled.cost_analysis()``  → HLO FLOPs + bytes accessed
+  * ``compiled.as_text()``        → per-collective operand bytes (parsed;
+    cost_analysis does not report collective traffic)
+  * ``compiled.memory_analysis()`` → per-device HBM footprint
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (as specified by the assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[16,4096,2304]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+# tuple-result collectives:  = (bf16[..], bf16[..]) all-reduce(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_S32_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _COMP_RE.match(stripped) if (
+            "->" in stripped and stripped.endswith("{")) else None
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if stripped == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def _line_coll(line: str):
+    m = _OP_RE.search(line)
+    if m:
+        dtype, dims, kind = m.groups()
+        return kind, _shape_bytes(dtype, dims)
+    m = _TUPLE_RE.search(line)
+    if m:
+        shapes, kind = m.groups()
+        return kind, sum(_shape_bytes(*dm.groups())
+                         for dm in _SHAPE_RE.finditer(shapes))
+    return None
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective kind, scaled by loop trip counts.
+
+    XLA prints each while-loop body once, so collectives inside scanned
+    layers would be undercounted by n_periods×. We split the module into
+    computations, read each while's trip count from its condition
+    computation (the s32 bound constant), and multiply body collectives
+    by the product of enclosing trip counts.
+
+    Result bytes are the wire-traffic proxy: all-gather output is the
+    fully-gathered tensor, all-reduce output equals its input (convention
+    noted in EXPERIMENTS.md).
+    """
+    comps = _split_computations(hlo_text)
+    # Trip count per computation used as a while body.
+    trips: Dict[str, int] = {}
+    parents: Dict[str, str] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            w = _WHILE_RE.search(line)
+            if w:
+                cond, body = w.groups()
+                consts = [int(c) for c in _S32_CONST_RE.findall(
+                    "\n".join(comps.get(cond, [])))]
+                trips[body] = max(consts) if consts else 1
+                parents[body] = name
+
+    def multiplier(name: str, depth: int = 0) -> int:
+        if depth > 16 or name not in parents:
+            return 1
+        return trips.get(name, 1) * multiplier(parents[name], depth + 1)
+
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for name, lines in comps.items():
+        mult = multiplier(name)
+        for line in lines:
+            lc = _line_coll(line)
+            if lc:
+                kind, nbytes = lc
+                out[kind] += nbytes * mult
+                counts[kind] += mult
+    out["_counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_detail: Dict[str, int]
+    model_flops: Optional[float] = None
+    memory_per_device: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / bound time (how close to roofline)."""
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        if bound <= 0:
+            return 0.0
+        useful = (self.model_flops or self.hlo_flops) / \
+            (self.chips * PEAK_FLOPS)
+        return useful / bound
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_ratio": (self.model_flops / self.hlo_flops
+                             if self.model_flops and self.hlo_flops else None),
+            "roofline_fraction": self.roofline_fraction,
+            "mem_per_device_gb": (self.memory_per_device / 2**30
+                                  if self.memory_per_device else None),
+        }
+
+
+def analyze(arch: str, shape: str, lowered, compiled, chips: int,
+            model_flops: Optional[float] = None,
+            flops_override: Optional[float] = None,
+            bytes_override: Optional[float] = None) -> Roofline:
+    """``flops_override``/``bytes_override`` carry the *global* analytic
+    counts from ``launch.cells.analytic_cost`` (XLA's cost_analysis is
+    per-device and counts while bodies once — see that docstring); the
+    raw compiled cost_analysis is kept as a cross-check in the record."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = flops_override if flops_override is not None \
+        else float(cost.get("flops", 0.0))
+    byts = bytes_override if bytes_override is not None \
+        else float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    total_coll = sum(v for k, v in coll.items() if k != "_counts")
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = getattr(ma, "temp_size_in_bytes", 0) + \
+            getattr(ma, "argument_size_in_bytes", 0) + \
+            getattr(ma, "output_size_in_bytes", 0)
+    except Exception:
+        pass
+    return Roofline(arch, shape, chips, flops, byts, total_coll, coll,
+                    model_flops=model_flops, memory_per_device=mem)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N_active·D for training; 2·N_active·D for a
+    forward-only cell (prefill) and 2·N_active·B for one decode token."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch       # decode: one token / row

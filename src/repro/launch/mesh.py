@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state — required because the
+dry-run forces 512 host devices while tests/benches must see one.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 multi-pod (512 chips).
+
+    Axes: 'pod' = data-parallel across pods (slow inter-pod links —
+    gradient all-reduce crosses them once per step); 'data' = FSDP/batch;
+    'model' = tensor/expert parallel within a pod.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    from jax.sharding import AxisType
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh():
+    """Single-device mesh with the production axis names (tests/smoke)."""
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))

@@ -1,0 +1,72 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm_135m \
+        --steps 200 --batch 8 --seq-len 128 [--reduced] \
+        [--checkpoint-dir /tmp/ckpt] [--resume]
+
+On the CPU container this trains reduced configs for real (the quickstart
+path); on TPU the same launcher scales to the production mesh (mesh shape
+is chosen from the available device count).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ARCH_IDS, get_config, reduced_config
+from repro.train.trainer import TrainJob, TrainJobConfig
+
+
+def pick_mesh():
+    devs = np.array(jax.devices())
+    n = len(devs)
+    model = 1
+    for cand in (16, 8, 4, 2, 1):
+        if n % cand == 0 and n >= cand * cand:
+            model = cand
+            break
+    data = n // model
+    return Mesh(devs.reshape(data, model), ("data", "model"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced smoke config of the arch")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--data-path", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    mesh = pick_mesh()
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)}")
+    job = TrainJob(cfg, TrainJobConfig(
+        arch=args.arch, steps=args.steps, batch=args.batch,
+        seq_len=args.seq_len, lr=args.lr, accum_steps=args.accum,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        data_path=args.data_path, seed=args.seed), mesh)
+    result = job.run()
+    first = job.history[0] if job.history else float("nan")
+    print(json.dumps({**result, "first_loss": first}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,365 @@
+"""GQA attention with the flavours the assigned archs need.
+
+Covers: grouped-query attention (einsum-grouped, no KV duplication), QKV
+bias (qwen), logit softcap (gemma2), sliding-window local attention
+(gemma2), cross-attention to frontend/encoder embeddings (vlm/audio), and
+KV-cache prefill/decode.
+
+``impl='xla'`` is the jnp path used for training and for the dry-run
+lowering (the roofline reads XLA HLO); ``impl='pallas'`` routes prefill
+through the flash-attention Pallas kernel (TPU target; validated in
+interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.common import AxisSizes, KeyGen, normal_init, rope, shard
+from repro.models.common import softcap as _softcap
+
+NEG_INF = -2.0e38
+
+
+def init_attn(kg: KeyGen, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    std = d ** -0.5
+    p = {
+        "wq": normal_init(kg(), (d, h, hd), std, dtype),
+        "wk": normal_init(kg(), (d, k, hd), std, dtype),
+        "wv": normal_init(kg(), (d, k, hd), std, dtype),
+        "wo": normal_init(kg(), (h, hd, d), (h * hd) ** -0.5, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((k, hd), dtype)
+        p["bv"] = jnp.zeros((k, hd), dtype)
+    return p
+
+
+def attn_specs(cfg: ArchConfig, ax: AxisSizes) -> Dict:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    s = {
+        "wq": ax.spec(("data", "model", None), (d, h, hd)),
+        "wk": ax.spec(("data", "model", None), (d, k, hd)),
+        "wv": ax.spec(("data", "model", None), (d, k, hd)),
+        "wo": ax.spec(("model", None, "data"), (h, hd, d)),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ax.spec(("model", None), (h, hd))
+        s["bk"] = ax.spec(("model", None), (k, hd))
+        s["bv"] = ax.spec(("model", None), (k, hd))
+    return s
+
+
+# NOTE (§Perf, refuted iteration): an FSDP "gather-at-use" constraint on
+# the weights (forcing weight all-gather instead of activation partial-sum
+# over 'data') was tried here and REVERTED: it fixed one pathology
+# (qwen2.5-14b multipod activation all-reduce) but regressed others
+# (llama-90b singlepod 639->1171 ms t_coll; qwen multipod 199->289 ms) —
+# the 3-axis resharding takes XLA's "involuntary full rematerialization"
+# path. GSPMD's own operand choice is better on net; see EXPERIMENTS.md.
+
+
+def _project_qkv(p: Dict, xq: jax.Array, xkv: jax.Array, cfg: ArchConfig,
+                 ax: AxisSizes, q_pos, kv_pos, use_rope: bool):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
+    k = jnp.einsum("btd,dmk->btmk", xkv, p["wk"])
+    v = jnp.einsum("btd,dmk->btmk", xkv, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if use_rope:
+        q = rope(q, q_pos, cfg.rope_theta)
+        k = rope(k, kv_pos, cfg.rope_theta)
+    return q, k, v
+
+
+def _out_proj(out: jax.Array, p: Dict, ax: AxisSizes) -> jax.Array:
+    return jnp.einsum("bshd,hdk->bsk", out, p["wo"])
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, cfg: ArchConfig,
+          mask: Optional[jax.Array]) -> jax.Array:
+    """Grouped-query scaled-dot-product attention.
+
+    q: (b, s, h, hd); k/v: (b, t, kv, hd); mask: broadcastable to
+    (b, kv, g, s, t) or None.
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / np.sqrt(hd)
+    scores = _softcap(scores, cfg.attn_softcap)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def _causal_mask(s: int, t: int, q_offset, window: Optional[int]):
+    """(s, t) boolean mask; q row i sits at absolute position q_offset+i."""
+    rows = jnp.arange(s)[:, None] + q_offset
+    cols = jnp.arange(t)[None, :]
+    m = cols <= rows
+    if window is not None:
+        m &= cols > rows - window
+    return m
+
+
+# Q-chunked attention: above this sequence length the full (S, S) score
+# tensor would dominate HBM (32k: ~TB-scale globally), so the XLA path
+# scans over query chunks — peak temp drops to (b, h, CHUNK_Q, S) while
+# total score traffic is unchanged. The Pallas flash kernel removes the
+# score traffic entirely (see EXPERIMENTS.md §Perf).
+CHUNK_Q = 2048
+CHUNK_THRESHOLD = 8192
+
+
+def _sdpa_qchunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                   cfg: ArchConfig, window: Optional[int],
+                   causal: bool) -> jax.Array:
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    nc = s // CHUNK_Q
+    assert nc * CHUNK_Q == s, (s, CHUNK_Q)
+    qc = q.reshape(b, nc, CHUNK_Q, h, hd).transpose(1, 0, 2, 3, 4)
+    idx = jnp.arange(nc)
+
+    # Sliding-window layers only ever see a (window + CHUNK_Q) band of
+    # keys per query chunk — slice it instead of scoring all s columns
+    # (gemma2 local layers at 32k: 6144-wide band vs 32768 → ~5.3× less
+    # score traffic/FLOPs; §Perf cell C).
+    band = min(s, (window + CHUNK_Q)) if (window and causal) else None
+
+    def body(_, xs):
+        qi, ci = xs
+        if band is not None and band < s:
+            start = jnp.clip(ci * CHUNK_Q + CHUNK_Q - band, 0, s - band)
+            kb = jax.lax.dynamic_slice(k, (0, start, 0, 0),
+                                       (b, band, kv, hd))
+            vb = jax.lax.dynamic_slice(v, (0, start, 0, 0),
+                                       (b, band, kv, hd))
+            rows = ci * CHUNK_Q + jnp.arange(CHUNK_Q)[:, None]
+            cols = start + jnp.arange(band)[None, :]
+            mask = (cols <= rows) & (cols > rows - window)
+            out = _sdpa(qi, kb, vb, cfg, mask)
+        else:
+            mask = _causal_mask(CHUNK_Q, s, ci * CHUNK_Q, window) \
+                if causal else None
+            out = _sdpa(qi, k, v, cfg, mask)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qc, idx))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+_FORCE_DENSE = False    # analytic cost path: no inner scans (XLA counts
+#                         while bodies once — see launch.cells.analytic_cost)
+
+
+class force_dense:
+    def __enter__(self):
+        global _FORCE_DENSE
+        self._old = _FORCE_DENSE
+        _FORCE_DENSE = True
+
+    def __exit__(self, *a):
+        global _FORCE_DENSE
+        _FORCE_DENSE = self._old
+
+
+def _sdpa_banded_unrolled(q, k, v, cfg, window):
+    """Python-unrolled banded attention — same math as the banded
+    q-chunked scan, with every chunk visible to HLO cost analysis (the
+    analytic roofline path counts while bodies once, so it must not
+    loop)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    nc = s // CHUNK_Q
+    band = min(s, window + CHUNK_Q)
+    outs = []
+    for ci in range(nc):
+        start = min(max(ci * CHUNK_Q + CHUNK_Q - band, 0), s - band)
+        qi = q[:, ci * CHUNK_Q:(ci + 1) * CHUNK_Q]
+        kb = k[:, start:start + band]
+        vb = v[:, start:start + band]
+        rows = ci * CHUNK_Q + jnp.arange(CHUNK_Q)[:, None]
+        cols = start + jnp.arange(band)[None, :]
+        mask = (cols <= rows) & (cols > rows - window)
+        outs.append(_sdpa(qi, kb, vb, cfg, mask))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _sdpa_auto(q, k, v, cfg, window, causal):
+    s = q.shape[1]
+    long = s > CHUNK_THRESHOLD and s % CHUNK_Q == 0
+    if long and _FORCE_DENSE and causal and window and \
+            window + CHUNK_Q < s:
+        return _sdpa_banded_unrolled(q, k, v, cfg, window)
+    if long and not _FORCE_DENSE:
+        return _sdpa_qchunked(q, k, v, cfg, window, causal)
+    mask = _causal_mask(s, k.shape[1], 0, window) if causal else None
+    return _sdpa(q, k, v, cfg, mask)
+
+
+def attend_full(p: Dict, x: jax.Array, cfg: ArchConfig, ax: AxisSizes,
+                local: bool, impl: str = "xla",
+                causal: bool = True) -> jax.Array:
+    """Training/prefill self-attention over the whole sequence.
+    ``causal=False`` gives the bidirectional encoder variant (whisper)."""
+    b, s, _ = x.shape
+    pos = jnp.arange(s)
+    q, k, v = _project_qkv(p, x, x, cfg, ax, pos, pos, use_rope=True)
+    q = shard(q, ax, (ax.batch_axes, None, "model", None))
+    k = shard(k, ax, (ax.batch_axes, None, "model", None))
+    v = shard(v, ax, (ax.batch_axes, None, "model", None))
+    window = cfg.sliding_window if local else None
+    if impl == "pallas" and causal:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True, window=window,
+                                   softcap=cfg.attn_softcap)
+    else:
+        out = _sdpa_auto(q, k, v, cfg, window, causal)
+    return _out_proj(out, p, ax)
+
+
+def attend_cross(p: Dict, x: jax.Array, src: jax.Array, cfg: ArchConfig,
+                 ax: AxisSizes) -> jax.Array:
+    """Cross-attention to frontend/encoder embeddings (no mask, no rope)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, src, cfg, ax, None, None, use_rope=False)
+    out = _sdpa(q, k, v, cfg, mask=None)
+    return _out_proj(out, p, ax)
+
+
+# ------------------------------------------------------------------ caching
+#
+# Cache layout is (batch, kv_heads, seq, head_dim) — decode-native: the
+# per-token attention consumes K/V directly as dot_general batch dims
+# (b, kv) × contraction over head_dim with NO transpose copies. The
+# baseline (b, seq, kv, hd) layout cost 2 full-cache transpose copies per
+# layer per token (§Perf cell A: 156 GB/layer → ~52 GB/layer). Prefill
+# pays one transpose when filling — amortized over thousands of decodes.
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, cross_len: int = 0,
+               dtype=jnp.bfloat16) -> Dict:
+    """Per-attention-layer cache template (used stacked over periods)."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    c = {"k": jnp.zeros((batch, kv, max_len, hd), dtype),
+         "v": jnp.zeros((batch, kv, max_len, hd), dtype)}
+    if cross_len:
+        c["ck"] = jnp.zeros((batch, kv, cross_len, hd), dtype)
+        c["cv"] = jnp.zeros((batch, kv, cross_len, hd), dtype)
+    return c
+
+
+def _sdpa_cached(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 cfg: ArchConfig, mask: Optional[jax.Array]) -> jax.Array:
+    """Decode attention against the (b, kv, t, hd) cache layout.
+
+    q: (b, s, H, hd) with tiny s (1 for decode); mask broadcastable to
+    (b, kv, g, s, t) or None. No transposition of the cache occurs.
+    """
+    b, s, h, hd = q.shape
+    kv = k_cache.shape[1]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd).transpose(0, 2, 3, 1, 4)   # tiny
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg,
+                        k_cache.astype(q.dtype)) / np.sqrt(hd)
+    scores = _softcap(scores, cfg.attn_softcap)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, v_cache.astype(q.dtype))
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, hd)
+
+
+def cache_specs(cfg: ArchConfig, ax: AxisSizes, cache: Dict) -> Dict:
+    return {name: ax.spec((ax.batch_axes, None, "model", None), arr.shape)
+            for name, arr in cache.items()}
+
+
+def prefill_attn(p: Dict, x: jax.Array, cfg: ArchConfig, ax: AxisSizes,
+                 cache: Dict, local: bool, impl: str = "xla"
+                 ) -> Tuple[jax.Array, Dict]:
+    """Full-sequence attention that also fills the KV cache."""
+    b, s, _ = x.shape
+    pos = jnp.arange(s)
+    q, k, v = _project_qkv(p, x, x, cfg, ax, pos, pos, use_rope=True)
+    window = cfg.sliding_window if local else None
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True, window=window,
+                                   softcap=cfg.attn_softcap)
+    else:
+        out = _sdpa_auto(q, k, v, cfg, window, causal=True)
+    cache = dict(cache)
+    # One transpose into the decode-native (b, kv, t, hd) layout.
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
+        (0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
+        (0, 0, 0, 0))
+    return _out_proj(out, p, ax), cache
+
+
+def decode_attn(p: Dict, x: jax.Array, cfg: ArchConfig, ax: AxisSizes,
+                cache: Dict, pos: jax.Array, local: bool,
+                impl: str = "xla") -> Tuple[jax.Array, Dict]:
+    """One-token decode against the (b, kv, t, hd) cache. x: (b, 1, d)."""
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, x, x, cfg, ax, pos[None], pos[None],
+                                   use_rope=True)
+    cache = dict(cache)
+    k_new = k_new.transpose(0, 2, 1, 3).astype(cache["k"].dtype)  # (b,kv,1,hd)
+    v_new = v_new.transpose(0, 2, 1, 3).astype(cache["v"].dtype)
+    max_len = cache["k"].shape[2]
+    at = jnp.minimum(pos, max_len - 1)
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k_new,
+                                              (0, 0, at, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v_new,
+                                              (0, 0, at, 0))
+    window = cfg.sliding_window if local else None
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_decode(q, cache["k"], cache["v"], at,
+                                window=window, softcap=cfg.attn_softcap)
+    else:
+        cols = jnp.arange(max_len)
+        valid = cols <= at
+        if window is not None:
+            valid &= cols > at - window
+        mask = valid[None, None, None, None, :]      # (b,kv,g,1,t)
+        out = _sdpa_cached(q, cache["k"], cache["v"], cfg, mask)
+    return _out_proj(out, p, ax), cache
+
+
+def decode_cross_attn(p: Dict, x: jax.Array, cfg: ArchConfig, ax: AxisSizes,
+                      cache: Dict) -> jax.Array:
+    """Cross-attention during decode: K/V precomputed at prefill time."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    out = _sdpa_cached(q, cache["ck"], cache["cv"], cfg, mask=None)
+    return _out_proj(out, p, ax)
+
+
+def fill_cross_cache(p: Dict, src: jax.Array, cfg: ArchConfig,
+                     cache: Dict) -> Dict:
+    k = jnp.einsum("btd,dmk->btmk", src, p["wk"])
+    v = jnp.einsum("btd,dmk->btmk", src, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    cache = dict(cache)
+    cache["ck"] = k.transpose(0, 2, 1, 3).astype(cache["ck"].dtype)
+    cache["cv"] = v.transpose(0, 2, 1, 3).astype(cache["cv"].dtype)
+    return cache

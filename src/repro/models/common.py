@@ -1,0 +1,145 @@
+"""Shared model utilities: norms, RoPE, init, and sharding rules.
+
+Sharding philosophy: every parameter/activation gets a *requested*
+PartitionSpec; a dimension is only sharded on a mesh axis when its size is
+divisible by that axis (small models simply replicate on 'model'). This is
+what lets one model definition serve smollm-135m (9 heads — replicated
+attention, sharded MLP) and grok-1 (TP over 48 heads / 32768 d_ff) on the
+same 16×16 production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisSizes:
+    """Mesh axis sizes used for divisibility-aware spec construction."""
+
+    sizes: Tuple[Tuple[str, int], ...]   # e.g. (("pod",2),("data",16),("model",16))
+    mesh: Optional[object] = None        # jax.sharding.Mesh (for constraints)
+
+    @staticmethod
+    def from_mesh(mesh) -> "AxisSizes":
+        return AxisSizes(tuple(zip(mesh.axis_names,
+                                   (mesh.devices.shape[i]
+                                    for i in range(len(mesh.axis_names))))),
+                         mesh)
+
+    @staticmethod
+    def single() -> "AxisSizes":
+        return AxisSizes((("data", 1), ("model", 1)))
+
+    def size(self, name) -> int:
+        if isinstance(name, (tuple, list)):
+            out = 1
+            for n in name:
+                out *= self.size(n)
+            return out
+        for n, s in self.sizes:
+            if n == name:
+                return s
+        return 1
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.sizes)
+
+    def has(self, name: str) -> bool:
+        return name in self.names
+
+    @property
+    def batch_axes(self):
+        """Axes that shard the batch dimension (pod+data when multi-pod)."""
+        return ("pod", "data") if self.has("pod") else ("data",)
+
+    def spec(self, dims: Sequence[Optional[object]],
+             shape: Sequence[int]) -> P:
+        """Build a PartitionSpec, dropping axes that don't divide."""
+        assert len(dims) == len(shape), (dims, shape)
+        out = []
+        for want, size in zip(dims, shape):
+            if want is None:
+                out.append(None)
+            elif size % self.size(want) == 0:
+                out.append(want)
+            else:
+                out.append(None)
+        return P(*out)
+
+
+def shard(x: jax.Array, ax: AxisSizes, dims: Sequence[Optional[object]]):
+    """with_sharding_constraint with divisibility fallback. No-op when the
+    mesh is absent or trivial (single-device smoke tests)."""
+    if ax.mesh is None or ax.mesh.size == 1:
+        return x
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ax.mesh, ax.spec(dims, x.shape)))
+
+
+# --------------------------------------------------------------------- norms
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dtype)
+
+
+def rms_norm_gated(x: jax.Array, z: jax.Array, w: jax.Array,
+                   eps: float = 1e-6) -> jax.Array:
+    """Mamba2's gated RMSNorm: norm(x * silu(z))."""
+    return rms_norm(x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), w, eps)
+
+
+# ---------------------------------------------------------------------- RoPE
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embeddings. x: (..., seq, heads, head_dim); positions: (seq,)
+    or (batch, seq) broadcastable to x's seq dim."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., seq, half)
+    angles = angles[..., None, :]                                # head axis
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- init
+
+def normal_init(key, shape, stddev, dtype=jnp.float32):
+    return (stddev * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+class KeyGen:
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy; logits (..., V), labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

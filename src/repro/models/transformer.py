@@ -1,0 +1,391 @@
+"""Composable decoder-LM assembly for all assigned architecture families.
+
+One definition covers dense / MoE / SSM / hybrid / VLM / enc-dec audio:
+the architecture's ``layer_pattern()`` (a *period block* of LayerSpecs) is
+replicated ``n_periods`` times by a ``lax.scan`` over stacked parameters —
+compile time stays flat in depth, which matters when lowering 40
+(arch × shape) cells for 512 devices.
+
+Entry points per model:
+  * ``loss(params, batch)``        — training loss (causal LM / enc-dec)
+  * ``prefill(params, batch)``     — fills the KV/SSM caches, returns logits
+  * ``decode(params, tokens, cache, pos)`` — one-token serve step
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ATTN, ATTN_CROSS, ATTN_LOCAL, DENSE, MAMBA,
+                                MOE, NONE, ArchConfig, LayerSpec)
+from repro.models import attention as A
+from repro.models import mamba2 as M
+from repro.models import mlp as F
+from repro.models.common import (AxisSizes, KeyGen, cross_entropy_loss,
+                                 normal_init, rms_norm, shard, softcap)
+
+
+def _prepend(spec, dim=None):
+    return jax.tree.map(lambda s: P(dim, *tuple(s)), spec,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    mesh: object                   # jax.sharding.Mesh
+    impl: str = "xla"              # 'xla' | 'pallas'
+    compute_dtype: object = jnp.bfloat16
+    param_dtype: object = jnp.float32
+    unroll: bool = False           # python-loop layers (FLOP accounting —
+    #                                XLA counts while bodies once, so the
+    #                                analytic roofline path unrolls)
+
+    def __post_init__(self):
+        self.ax = AxisSizes.from_mesh(self.mesh)
+        self.pattern = self.cfg.layer_pattern()
+
+    # ------------------------------------------------------------- params
+
+    def _init_layer(self, kg: KeyGen, spec: LayerSpec) -> Dict:
+        cfg, dt = self.cfg, self.param_dtype
+        d = cfg.d_model
+        p: Dict = {"norm1": jnp.zeros((d,), jnp.float32)}
+        if spec.mixer == MAMBA:
+            p["mix"] = M.init_mamba(kg, cfg, dt)
+        else:
+            p["mix"] = A.init_attn(kg, cfg, dt)
+        if spec.cross:
+            p["norm_cross"] = jnp.zeros((d,), jnp.float32)
+            p["cross"] = A.init_attn(kg, cfg, dt)
+        if spec.mlp != NONE:
+            p["norm2"] = jnp.zeros((d,), jnp.float32)
+            p["mlp"] = (F.init_dense_mlp(kg, cfg, dt) if spec.mlp == DENSE
+                        else F.init_moe(kg, cfg, dt))
+        return p
+
+    def _layer_specs(self, spec: LayerSpec) -> Dict:
+        cfg, ax = self.cfg, self.ax
+        s: Dict = {"norm1": P(None)}
+        if spec.mixer == MAMBA:
+            s["mix"] = M.mamba_specs(cfg, ax)
+        else:
+            s["mix"] = A.attn_specs(cfg, ax)
+        if spec.cross:
+            s["norm_cross"] = P(None)
+            s["cross"] = A.attn_specs(cfg, ax)
+        if spec.mlp != NONE:
+            s["norm2"] = P(None)
+            s["mlp"] = (F.dense_mlp_specs(cfg, ax) if spec.mlp == DENSE
+                        else F.moe_specs(cfg, ax))
+        return s
+
+    def init(self, seed: int = 0):
+        cfg = self.cfg
+        key = jax.random.PRNGKey(seed)
+        kg = KeyGen(key)
+
+        def stack(init_fn, n):
+            return jax.vmap(lambda k: init_fn(KeyGen(k)))(
+                jax.random.split(kg(), n))
+
+        params: Dict = {
+            "embed": normal_init(kg(), (cfg.vocab, cfg.d_model),
+                                 cfg.d_model ** -0.5, self.param_dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "blocks": {
+                f"l{i}": stack(functools.partial(self._init_layer, spec=sp),
+                               cfg.n_periods)
+                for i, sp in enumerate(self.pattern)
+            },
+        }
+        if cfg.encoder_layers:
+            enc_spec = LayerSpec(ATTN, DENSE)
+            params["encoder"] = {
+                "blocks": stack(
+                    functools.partial(self._init_layer, spec=enc_spec),
+                    cfg.encoder_layers),
+                "norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            }
+        if cfg.family == "vlm":
+            params["front_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        return params
+
+    def param_specs(self):
+        cfg, ax = self.cfg, self.ax
+        specs: Dict = {
+            "embed": ax.spec(("model", "data"), (cfg.vocab, cfg.d_model)),
+            "final_norm": P(None),
+            "blocks": {
+                f"l{i}": _prepend(self._layer_specs(sp))
+                for i, sp in enumerate(self.pattern)
+            },
+        }
+        if cfg.encoder_layers:
+            specs["encoder"] = {
+                "blocks": _prepend(self._layer_specs(LayerSpec(ATTN, DENSE))),
+                "norm": P(None),
+            }
+        if cfg.family == "vlm":
+            specs["front_norm"] = P(None)
+        return specs
+
+    # ------------------------------------------------------------- caches
+
+    def _layer_cache(self, spec: LayerSpec, batch: int, max_len: int,
+                     dtype) -> Dict:
+        cfg = self.cfg
+        c: Dict = {}
+        if spec.mixer in (ATTN, ATTN_LOCAL):
+            c.update(A.init_cache(cfg, batch, max_len, dtype=dtype))
+        elif spec.mixer == ATTN_CROSS:
+            full = A.init_cache(cfg, batch, 1, cross_len=cfg.frontend_len,
+                                dtype=dtype)
+            c.update({"ck": full["ck"], "cv": full["cv"]})
+        elif spec.mixer == MAMBA:
+            c.update(M.init_mamba_cache(cfg, batch, dtype=jnp.float32))
+        if spec.cross:
+            full = A.init_cache(cfg, batch, 1, cross_len=cfg.frontend_len,
+                                dtype=dtype)
+            c.update({"ck": full["ck"], "cv": full["cv"]})
+        return c
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        out = {}
+        for i, sp in enumerate(self.pattern):
+            layer = self._layer_cache(sp, batch, max_len, dtype)
+            out[f"l{i}"] = jax.tree.map(
+                lambda a: jnp.zeros((self.cfg.n_periods,) + a.shape, a.dtype),
+                layer)
+        return out
+
+    def cache_pspecs(self, cache) -> Dict:
+        """Key-aware cache sharding with fallbacks.
+
+        KV caches (period, batch, seq, kv_heads, hd): batch over the batch
+        axes when divisible; otherwise (batch=1 long-context cells) the
+        *sequence* dim is sharded — over 'data', and additionally over
+        'model' when the kv-head count doesn't divide the model axis.
+        SSM states shard heads over 'model'; conv tails shard channels.
+        """
+        ax = self.ax
+
+        def kv_spec(a):
+            per, b, kv, s, hd = a.shape   # decode-native layout
+            batch_ok = b % ax.size(ax.batch_axes) == 0 and \
+                ax.size(ax.batch_axes) > 1
+            heads_ok = kv % ax.size("model") == 0 and ax.size("model") > 1
+            if batch_ok:
+                return ax.spec((None, ax.batch_axes,
+                                "model" if heads_ok else None, None, None),
+                               a.shape)
+            seq_axes = ("data",) if heads_ok else ("data", "model")
+            if ax.has("pod"):
+                seq_axes = ("pod",) + seq_axes
+            return ax.spec((None, None, "model" if heads_ok else None,
+                            seq_axes, None), a.shape)
+
+        def spec_of(path, a):
+            key = str(path[-1].key) if hasattr(path[-1], "key") else ""
+            if key in ("k", "v", "ck", "cv"):
+                return kv_spec(a)
+            if key == "state":       # (period, b, nh, p, n)
+                return ax.spec((None, ax.batch_axes, "model", None, None),
+                               a.shape)
+            if key in ("conv_x", "conv_bc"):   # (period, b, w-1, ch)
+                return ax.spec((None, ax.batch_axes, None, "model"),
+                               a.shape)
+            return ax.spec((None, ax.batch_axes) + (None,) * (a.ndim - 2),
+                           a.shape)
+
+        return jax.tree_util.tree_map_with_path(spec_of, cache)
+
+    # ------------------------------------------------------------ forward
+
+    def _embed(self, params, tokens):
+        x = params["embed"][tokens].astype(self.compute_dtype)
+        return x * jnp.asarray(self.cfg.d_model ** 0.5, self.compute_dtype)
+
+    def _logits(self, params, x):
+        x = rms_norm(x, params["final_norm"])
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"].astype(self.compute_dtype))
+        logits = shard(logits, self.ax, (self.ax.batch_axes, None, "model"))
+        return softcap(logits, self.cfg.final_softcap)
+
+    def _mixer(self, lp, spec: LayerSpec, h, mode, cache, pos, src):
+        cfg, ax = self.cfg, self.ax
+        local = spec.mixer == ATTN_LOCAL
+        if spec.mixer == MAMBA:
+            if mode == "full":
+                return M.mamba_full(lp["mix"], h, cfg, ax, self.impl), cache
+            if mode == "prefill":
+                return M.mamba_prefill(lp["mix"], h, cfg, ax, cache,
+                                       self.impl)
+            return M.mamba_decode(lp["mix"], h, cfg, ax, cache)
+        if spec.mixer == ATTN_CROSS:
+            if mode in ("full", "prefill"):
+                out = A.attend_cross(lp["mix"], h, src, cfg, ax)
+                if mode == "prefill":
+                    cache = A.fill_cross_cache(lp["mix"], src, cfg, cache)
+                return out, cache
+            return A.decode_cross_attn(lp["mix"], h, cfg, ax, cache), cache
+        # Self-attention.
+        if mode == "full":
+            return A.attend_full(lp["mix"], h, cfg, ax, local,
+                                 self.impl), cache
+        if mode == "prefill":
+            return A.prefill_attn(lp["mix"], h, cfg, ax, cache, local,
+                                  self.impl)
+        return A.decode_attn(lp["mix"], h, cfg, ax, cache, pos, local,
+                             self.impl)
+
+    def _block(self, x, blk, spec_cache, mode, pos, src):
+        """One period block. blk/spec_cache: per-period slices."""
+        new_cache = {}
+        for i, sp in enumerate(self.pattern):
+            lp = blk[f"l{i}"]
+            lc = spec_cache.get(f"l{i}", {}) if spec_cache else {}
+            h = rms_norm(x, lp["norm1"])
+            # Split the layer cache between mixer entries and cross entries.
+            if sp.cross:
+                mix_c = {k: v for k, v in lc.items() if k in ("k", "v")}
+                cross_c = {k: v for k, v in lc.items() if k in ("ck", "cv")}
+            else:
+                mix_c, cross_c = lc, None
+            out, mix_c = self._mixer(lp, sp, h, mode, mix_c, pos, src)
+            x = x + out
+            if sp.cross:
+                hc = rms_norm(x, lp["norm_cross"])
+                if mode in ("full", "prefill"):
+                    x = x + A.attend_cross(lp["cross"], hc, src, self.cfg,
+                                           self.ax)
+                    if mode == "prefill":
+                        cross_c = A.fill_cross_cache(lp["cross"], src,
+                                                     self.cfg, cross_c)
+                else:
+                    x = x + A.decode_cross_attn(lp["cross"], hc, self.cfg,
+                                                self.ax, cross_c)
+            if sp.mlp != NONE:
+                h2 = rms_norm(x, lp["norm2"])
+                if sp.mlp == DENSE:
+                    x = x + F.dense_mlp(lp["mlp"], h2, self.ax)
+                else:
+                    x = x + F.moe_mlp(lp["mlp"], h2, self.cfg, self.ax,
+                                      self.mesh)
+            if spec_cache is not None:
+                nc = dict(mix_c or {})
+                if sp.cross and cross_c:
+                    nc.update(cross_c)
+                new_cache[f"l{i}"] = nc
+        return x, new_cache
+
+    def _run_blocks(self, params, x, mode, cache=None, pos=None, src=None):
+        remat = self.cfg.remat and mode == "full"
+
+        if self.unroll:
+            return self._run_blocks_unrolled(params, x, mode, cache, pos,
+                                             src, remat)
+
+        if cache is None:
+            def body(carry, blk):
+                y, _ = self._block(carry, blk, None, mode, pos, src)
+                return y, None
+            if remat:
+                body = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body, x, params["blocks"])
+            return x, None
+
+        def body(carry, xs):
+            blk, cb = xs
+            y, nc = self._block(carry, blk, cb, mode, pos, src)
+            return y, nc
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        return x, new_cache
+
+    def _run_blocks_unrolled(self, params, x, mode, cache, pos, src, remat):
+        """Python loop over periods — identical math to the scan path."""
+        new_caches = []
+        for i in range(self.cfg.n_periods):
+            blk = jax.tree.map(lambda a: a[i], params["blocks"])
+            cb = jax.tree.map(lambda a: a[i], cache) if cache is not None \
+                else None
+
+            def body(carry, blk=blk, cb=cb):
+                return self._block(carry, blk, cb, mode, pos, src)
+
+            if remat and cache is None:
+                body = jax.checkpoint(body)
+            x, nc = body(x)
+            if cache is not None:
+                new_caches.append(nc)
+        if cache is None:
+            return x, None
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+        return x, stacked
+
+    def encode(self, params, frames):
+        """Whisper encoder over stub frame embeddings (b, F, d)."""
+        x = frames.astype(self.compute_dtype)
+        enc = params["encoder"]
+
+        def body(carry, blk):
+            h = rms_norm(carry, blk["norm1"])
+            out = A.attend_full(blk["mix"], h, self.cfg, self.ax,
+                                local=False, impl="xla", causal=False)
+            carry = carry + out
+            h2 = rms_norm(carry, blk["norm2"])
+            carry = carry + F.dense_mlp(blk["mlp"], h2, self.ax)
+            return carry, None
+
+        if self.unroll:
+            for i in range(self.cfg.encoder_layers):
+                x, _ = body(x, jax.tree.map(lambda a: a[i], enc["blocks"]))
+        else:
+            x, _ = jax.lax.scan(body, x, enc["blocks"])
+        return rms_norm(x, enc["norm"])
+
+    def _frontend(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return self.encode(params, batch["frontend"])
+        if cfg.family == "vlm":
+            return rms_norm(batch["frontend"].astype(self.compute_dtype),
+                            params["front_norm"])
+        return None
+
+    # -------------------------------------------------------- entry points
+
+    def loss(self, params, batch) -> jax.Array:
+        params = jax.tree.map(
+            lambda a: a.astype(self.compute_dtype)
+            if a.dtype == jnp.float32 and a.ndim > 1 else a, params)
+        src = self._frontend(params, batch)
+        x = self._embed(params, batch["tokens"])
+        x = shard(x, self.ax, (self.ax.batch_axes, None, None))
+        x, _ = self._run_blocks(params, x, "full", src=src)
+        logits = self._logits(params, x)
+        return cross_entropy_loss(logits, batch["labels"])
+
+    def prefill(self, params, batch, cache):
+        src = self._frontend(params, batch)
+        x = self._embed(params, batch["tokens"])
+        x, cache = self._run_blocks(params, x, "prefill", cache=cache,
+                                    src=src)
+        logits = self._logits(params, x[:, -1:, :])
+        return logits, cache
+
+    def decode(self, params, tokens, cache, pos):
+        """tokens: (b, 1); pos: scalar int32 (write position)."""
+        x = self._embed(params, tokens)
+        x, cache = self._run_blocks(params, x, "decode", cache=cache,
+                                    pos=pos)
+        logits = self._logits(params, x)
+        return logits, cache

@@ -1,0 +1,86 @@
+"""Replica autoscaler — the WS TRE's instance-adjustment loop (§6.4).
+
+Bridges the live serving engine to ``core.ws_manager.WSManager``: slot
+utilization across replicas feeds ``observe_utilization``; when the 80 %
+policy fires, replicas are added/removed and the node delta is
+requested/released from the provision service (the PhoenixCloud
+coordination point).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional
+
+from repro.configs.base import ArchConfig
+from repro.core.ws_manager import InstanceAdjustmentPolicy, WSManager
+from repro.serving.engine import LeastLoadedRouter, Replica, Request
+
+
+class AutoscaledService:
+    def __init__(self, cfg: ArchConfig, mesh, *,
+                 policy: Optional[InstanceAdjustmentPolicy] = None,
+                 slots_per_replica: int = 8, max_len: int = 128,
+                 params=None,
+                 on_scale: Optional[Callable[[int, int], None]] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.policy = policy or InstanceAdjustmentPolicy(
+            nodes_per_instance=cfg.serve_chips_per_replica)
+        self.manager = WSManager(policy=self.policy)
+        self.slots = slots_per_replica
+        self.max_len = max_len
+        self.router = LeastLoadedRouter()
+        self.on_scale = on_scale       # callback(old_n, new_n) → provision
+        self._params = params
+        self.replicas: List[Replica] = []
+        self._mk_replica_count = 0
+        for _ in range(self.policy.initial_instances):
+            self._add_replica()
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+
+    def _add_replica(self):
+        r = Replica(self.cfg, self.mesh, slots=self.slots,
+                    max_len=self.max_len, params=self._params)
+        if self._params is None:
+            self._params = r.params       # share weights across replicas
+        self.replicas.append(r)
+        self._mk_replica_count += 1
+
+    def submit(self, req: Request):
+        req.submitted = time.time()
+        self.queue.append(req)
+
+    @property
+    def utilization(self) -> float:
+        if not self.replicas:
+            return 1.0
+        return sum(r.n_active for r in self.replicas) / \
+            sum(r.slots for r in self.replicas)
+
+    def tick(self, now: float):
+        """One scheduling tick: admit, decode, autoscale."""
+        # Admit queued requests to the least-loaded replicas.
+        still = []
+        for req in self.queue:
+            target = self.router.route(self.replicas)
+            if target is None or not target.admit(req):
+                still.append(req)
+        self.queue = still
+        # Decode step on every replica.
+        for r in self.replicas:
+            self.completed.extend(r.step())
+        # Autoscaling (the §6.4 policy, verbatim thresholds).
+        new_count = self.manager.observe_utilization(now, self.utilization)
+        if new_count is not None and new_count != len(self.replicas):
+            old = len(self.replicas)
+            while len(self.replicas) < new_count:
+                self._add_replica()
+            while len(self.replicas) > new_count:
+                idle = [r for r in self.replicas if r.n_active == 0]
+                if not idle:
+                    break                 # drain before shrink
+                self.replicas.remove(idle[-1])
+            if self.on_scale and len(self.replicas) != old:
+                self.on_scale(old, len(self.replicas))

@@ -1,0 +1,129 @@
+"""Serving engine — continuous-batching decode over KV caches.
+
+A ``Replica`` is the WS TRE's unit of scaling (== the paper's "Web
+service instance"): it owns a fixed pool of decode slots; requests are
+prefilled into free slots and all active slots step together. Slot
+occupancy is the utilization signal the paper's §6.4 instance-adjustment
+policy consumes (the 80 % rule), via ``Replica.utilization``.
+
+``LeastLoadedRouter`` is the LVS least-connection analogue: requests go
+to the replica with the fewest outstanding slots.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int = 16
+    submitted: float = 0.0
+    completed: float = 0.0
+    output: Optional[List[int]] = None
+
+
+class Replica:
+    def __init__(self, cfg: ArchConfig, mesh, slots: int = 8,
+                 max_len: int = 256, compute_dtype=jnp.float32,
+                 params=None, seed: int = 0):
+        self.cfg = cfg
+        self.model = Model(cfg, mesh, compute_dtype=compute_dtype)
+        self.params = params if params is not None else self.model.init(seed)
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = self.model.init_cache(slots, max_len,
+                                           dtype=compute_dtype)
+        self.pos = np.zeros(slots, np.int32)       # next write position
+        self.remaining = np.zeros(slots, np.int32)
+        self.active: Dict[int, Request] = {}       # slot → request
+        self.last_token = np.zeros(slots, np.int32)
+        self._decode = jax.jit(self.model.decode)
+        self._prefill = jax.jit(self.model.prefill)
+
+    # ------------------------------------------------------------- slots
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    @property
+    def utilization(self) -> float:
+        return self.n_active / self.slots
+
+    def free_slot(self) -> Optional[int]:
+        for s in range(self.slots):
+            if s not in self.active:
+                return s
+        return None
+
+    # ----------------------------------------------------------- serving
+
+    def admit(self, req: Request) -> bool:
+        slot = self.free_slot()
+        if slot is None:
+            return False
+        # Prefill the slot: run the prompt through a single-row cache and
+        # splice it in (batch=1 prefill keeps latency bounded).
+        row_cache = self.model.init_cache(1, self.max_len,
+                                          dtype=self.cache_dtype())
+        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+        if self.cfg.family in ("vlm", "audio"):
+            batch["frontend"] = jnp.zeros(
+                (1, self.cfg.frontend_len, self.cfg.d_model), jnp.float32)
+        logits, row_cache = self._prefill(self.params, batch, row_cache)
+        self.cache = jax.tree.map(
+            lambda full, row: jax.lax.dynamic_update_slice(
+                full, row.astype(full.dtype),
+                (0, slot) + (0,) * (full.ndim - 2)),
+            self.cache, row_cache)
+        self.active[slot] = req
+        self.pos[slot] = len(req.prompt)
+        self.remaining[slot] = req.max_new_tokens
+        self.last_token[slot] = int(jnp.argmax(logits[0, -1]))
+        req.output = [self.last_token[slot]]
+        return True
+
+    def cache_dtype(self):
+        return jax.tree.leaves(self.cache)[0].dtype
+
+    def step(self) -> List[Request]:
+        """One decode step for all active slots; returns finished reqs."""
+        if not self.active:
+            return []
+        toks = jnp.asarray(self.last_token[:, None])
+        pos = jnp.int32(int(self.pos.max()))   # uniform write position
+        logits, self.cache = self._decode(self.params, toks, self.cache, pos)
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+        finished = []
+        for slot, req in list(self.active.items()):
+            self.last_token[slot] = nxt[slot]
+            req.output.append(int(nxt[slot]))
+            self.pos[slot] += 1
+            self.remaining[slot] -= 1
+            if self.remaining[slot] <= 0 or self.pos[slot] >= self.max_len - 1:
+                req.completed = time.time()
+                finished.append(req)
+                del self.active[slot]
+        return finished
+
+
+class LeastLoadedRouter:
+    """LVS least-connection scheduling (§6.4) over replicas."""
+
+    def route(self, replicas: List[Replica]) -> Optional[Replica]:
+        candidates = [r for r in replicas if r.free_slot() is not None]
+        if not candidates:
+            return None
+        return min(candidates, key=lambda r: r.n_active)

@@ -1,0 +1,10 @@
+from repro.sim.simulator import (SimResult, build_dcs, build_ec2_rightscale,
+                                 build_fb, build_flb_nub, run_sim)
+from repro.sim.traces import (TraceSpec, nasa_ipsc, scale_jobs, sdsc_blue,
+                              worldcup98)
+
+__all__ = [
+    "SimResult", "run_sim", "build_dcs", "build_fb", "build_flb_nub",
+    "build_ec2_rightscale", "TraceSpec", "nasa_ipsc", "sdsc_blue",
+    "worldcup98", "scale_jobs",
+]

@@ -1,0 +1,163 @@
+"""Optimizers with mesh-sharded state (no external deps).
+
+State tensors inherit the parameter PartitionSpecs, so optimizer memory is
+fully sharded over (data × model) — ZeRO-style. ``adafactor`` (factored
+second moment, no first moment by default) is used for the ≥90 B configs
+so that optimizer state fits 16 GB/chip on the 16×16 mesh; ``adamw`` is
+the default elsewhere. See EXPERIMENTS.md §Dry-run for the per-arch
+memory analysis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], Tuple[PyTree, PyTree]]
+    state_specs: Callable[[PyTree], PyTree]   # param specs → state specs
+
+
+def _global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads)
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          max_grad_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step_lr):
+        grads = clip_by_global_norm(grads, max_grad_norm)
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - step_lr * step
+            return newp.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        newp = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        return newp, {"mu": mu, "nu": nu, "count": count}
+
+    def state_specs(pspecs):
+        from jax.sharding import PartitionSpec as P
+        return {"mu": pspecs, "nu": pspecs, "count": P()}
+
+    return Optimizer(init, update, state_specs)
+
+
+def adafactor(lr: float = 1e-3, eps: float = 1e-30, decay: float = 0.8,
+              max_grad_norm: float = 1.0,
+              min_factored_ndim: int = 2) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018).
+
+    Tensors with ndim >= 2 store row/col second-moment vectors instead of
+    a full tensor: state is O(sum of dims), not O(numel) — the memory
+    trick that lets grok-1/jamba/llama-90b train on 256 chips.
+    """
+    def _factored(p):
+        return p.ndim >= min_factored_ndim
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(one, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step_lr):
+        grads = clip_by_global_norm(grads, max_grad_norm)
+        count = state["count"] + 1
+        beta = 1.0 - count.astype(jnp.float32) ** -decay
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                rfac = (vr / jnp.maximum(denom, eps))[..., None]
+                cfac = vc[..., None, :]
+                precond = g * jax.lax.rsqrt(
+                    jnp.maximum(rfac * cfac, eps))
+                newv = {"vr": vr, "vc": vc}
+            else:
+                nv = beta * v["v"] + (1 - beta) * g2
+                precond = g * jax.lax.rsqrt(jnp.maximum(nv, eps))
+                newv = {"v": nv}
+            # Update clipping (RMS <= 1) as in the paper.
+            rms = jnp.sqrt(jnp.mean(precond * precond) + 1e-30)
+            precond = precond / jnp.maximum(1.0, rms)
+            newp = (p.astype(jnp.float32) - step_lr * precond).astype(p.dtype)
+            return newp, newv
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        new_p, new_v = [], []
+        for g, v, p in zip(flat_g, flat_v, flat_p):
+            np_, nv_ = upd(g, v, p)
+            new_p.append(np_)
+            new_v.append(nv_)
+        return (jax.tree.unflatten(tdef, new_p),
+                {"v": jax.tree.unflatten(tdef, new_v), "count": count})
+
+    def state_specs(pspecs):
+        from jax.sharding import PartitionSpec as P
+
+        def one(spec):
+            t = tuple(spec)
+            if len(t) >= min_factored_ndim:
+                return {"vr": P(*t[:-1]), "vc": P(*(t[:-2] + t[-1:]))}
+            return {"v": P(*t) if t else P()}
+
+        return {"v": jax.tree.map(one, pspecs,
+                                  is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec)),
+                "count": P()}
+
+    return Optimizer(init, update, state_specs)
+
+
+def get_optimizer(name: str, lr: float = 3e-4) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr)
+    if name == "adafactor":
+        return adafactor(lr=lr)
+    raise KeyError(name)

@@ -1,0 +1,200 @@
+"""Train-step factory: gradient accumulation, mixed precision, sharded
+optimizer, and the elastic training-job runner used by the PhoenixCloud
+PBJ TRE.
+
+``make_train_step`` builds the jit-able (params, opt_state, batch) →
+(params, opt_state, metrics) function used by both the real trainer and
+the multi-pod dry-run. The microbatch loop is a ``lax.scan`` so the HLO
+stays compact; gradients accumulate in fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import Model
+from repro.train.checkpoint import Checkpointer
+from repro.train.data import make_source
+from repro.train.optimizer import Optimizer, get_optimizer
+
+PyTree = Any
+
+
+def batch_pspecs(cfg: ArchConfig, ax) -> Dict[str, P]:
+    specs = {"tokens": P(ax.batch_axes, None),
+             "labels": P(ax.batch_axes, None)}
+    if cfg.family in ("vlm", "audio"):
+        specs["frontend"] = P(ax.batch_axes, None, None)
+    return specs
+
+
+def make_train_step(model: Model, optimizer: Optimizer,
+                    accum_steps: int = 1, grad_pspecs=None) -> Callable:
+    """Returns train_step(params, opt_state, batch) → (p, s, metrics).
+
+    ``batch`` has leading global_batch; with accum_steps > 1 it is split
+    into (accum, micro, ...) and scanned, accumulating fp32 grads —
+    activation memory scales with the microbatch, not global batch.
+
+    ``grad_pspecs`` (the parameter PartitionSpecs) pins the fp32
+    accumulator to the parameter sharding — without it GSPMD replicates
+    the accumulator and the per-step gradient sync degrades from
+    reduce-scatter-sized traffic to full all-reduces (§Perf cell B).
+    """
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def _pin(tree):
+        if grad_pspecs is None or model.mesh is None or model.mesh.size == 1:
+            return tree
+        from jax.sharding import NamedSharding
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(model.mesh, s)), tree, grad_pspecs)
+
+    def train_step(params, opt_state, batch, lr):
+        if accum_steps == 1:
+            loss, grads = grad_fn(params, batch)
+            grads = _pin(grads)
+        else:
+            def reshape(x):
+                return x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                 + x.shape[1:])
+            micro = jax.tree.map(reshape, batch)
+            zero = _pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                loss, grads = grad_fn(params, mb)
+                acc = _pin(jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads))
+                return (acc, loss_acc + loss), None
+
+            (gsum, loss_sum), _ = jax.lax.scan(body, (zero, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss = loss_sum / accum_steps
+        params, opt_state = optimizer.update(grads, opt_state, params, lr)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainJobConfig:
+    arch: str
+    steps: int = 100
+    batch: int = 8
+    seq_len: int = 128
+    lr: float = 3e-4
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 50
+    seed: int = 0
+    accum_steps: int = 1
+    data_path: Optional[str] = None
+
+
+class TrainJob:
+    """An elastic, preemptible training job — the payload a PhoenixCloud
+    PBJ TRE schedules. Supports checkpoint-preempt (§5.1 adaptation):
+    ``preempt()`` checkpoints and stops; ``run()`` on a new mesh restores
+    and reshards automatically.
+    """
+
+    def __init__(self, cfg: ArchConfig, job: TrainJobConfig, mesh,
+                 compute_dtype=jnp.float32):
+        self.cfg = cfg
+        self.jc = job
+        self.mesh = mesh
+        self.model = Model(cfg, mesh, compute_dtype=compute_dtype)
+        self.optimizer = get_optimizer(cfg.optimizer, lr=job.lr)
+        self.source = make_source(cfg, job.batch, job.seq_len,
+                                  path=job.data_path, seed=job.seed)
+        self.ckpt = Checkpointer(job.checkpoint_dir) \
+            if job.checkpoint_dir else None
+        self._preempt = False
+        self.step = 0
+        self.params = None
+        self.opt_state = None
+        self.history = []
+
+    # -------------------------------------------------------------- state
+
+    def _placed(self, tree, specs):
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
+            tree, specs, is_leaf=lambda x: not isinstance(x, dict))
+
+    def initialize(self):
+        pspecs = self.model.param_specs()
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            step = self.ckpt.latest_step()
+            template = jax.eval_shape(lambda: self.model.init(self.jc.seed))
+            tpl = {"params": template,
+                   "opt": jax.eval_shape(self.optimizer.init, template)}
+            specs = {"params": pspecs,
+                     "opt": self.optimizer.state_specs(pspecs)}
+            state, meta = self.ckpt.restore(step, tpl, mesh=self.mesh,
+                                            specs=specs)
+            self.params, self.opt_state = state["params"], state["opt"]
+            self.step = int(meta["step"])
+        else:
+            with jax.default_device(jax.devices()[0]):
+                params = self.model.init(self.jc.seed)
+            self.params = params
+            self.opt_state = self.optimizer.init(params)
+            self.step = 0
+
+    def preempt(self):
+        self._preempt = True
+
+    def checkpoint(self, block: bool = False):
+        if not self.ckpt:
+            return
+        self.ckpt.save_async(self.step,
+                             {"params": self.params, "opt": self.opt_state},
+                             metadata={"step": self.step})
+        if block:
+            self.ckpt.wait()
+
+    # ---------------------------------------------------------------- run
+
+    def run(self) -> Dict:
+        if self.params is None:
+            self.initialize()
+        step_fn = jax.jit(make_train_step(self.model, self.optimizer,
+                                          self.jc.accum_steps),
+                          donate_argnums=(0, 1))
+        self._preempt = False
+        t0 = time.time()
+        while self.step < self.jc.steps and not self._preempt:
+            batch = jax.tree.map(jnp.asarray,
+                                 self.source.batch_at(self.step))
+            self.params, self.opt_state, metrics = step_fn(
+                self.params, self.opt_state, batch,
+                jnp.float32(self.jc.lr))
+            self.step += 1
+            self.history.append(float(metrics["loss"]))
+            if self.ckpt and self.step % self.jc.checkpoint_every == 0:
+                self.checkpoint()
+        if self.ckpt:
+            self.checkpoint(block=True)
+        return {
+            "completed": self.step >= self.jc.steps,
+            "step": self.step,
+            "loss": self.history[-1] if self.history else None,
+            "wall_seconds": time.time() - t0,
+        }

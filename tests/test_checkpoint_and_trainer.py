@@ -1,0 +1,203 @@
+"""Fault-tolerance substrate: checkpoint/restore/reshard, preempt/resume,
+deterministic data, optimizer behaviour."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced_config
+from repro.launch.mesh import make_local_mesh
+from repro.train.checkpoint import Checkpointer
+from repro.train.data import SyntheticLM, DataConfig
+from repro.train.optimizer import adafactor, adamw, get_optimizer
+from repro.train.trainer import TrainJob, TrainJobConfig
+
+
+# --------------------------------------------------------------- checkpoint
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32),
+                  "d": jnp.float32(3.5)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree()
+    ck.save(7, tree, metadata={"step": 7, "note": "x"})
+    assert ck.latest_step() == 7
+    out, meta = ck.restore(7, jax.tree.map(jnp.zeros_like, tree))
+    assert meta["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in range(5):
+        ck.save_async(s, {"x": jnp.full((4,), s)})
+    ck.wait()
+    assert ck.all_steps() == [3, 4]      # GC kept the last two
+    out, _ = ck.restore(4, {"x": jnp.zeros((4,))})
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.full((4,), 4.0))
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A stale .tmp dir never shadows a published checkpoint."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"x": jnp.ones(3)})
+    os.makedirs(os.path.join(str(tmp_path), "step_2.tmp"))  # crashed write
+    assert ck.latest_step() == 1
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"x": jnp.ones((128,))})
+    blob = os.path.join(str(tmp_path), "step_1", "leaf_0.npy")
+    arr = np.load(blob)
+    arr[0] = 99.0
+    np.save(blob, arr)
+    with pytest.raises(IOError, match="checksum"):
+        ck.restore(1, {"x": jnp.zeros((128,))})
+
+
+def test_checkpoint_reshard_on_restore(tmp_path):
+    """Restore places leaves with the *target* sharding (elastic rescale)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = make_local_mesh()
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": jnp.arange(16.0).reshape(4, 4)})
+    out, _ = ck.restore(1, {"w": jnp.zeros((4, 4))}, mesh=mesh,
+                        specs={"w": P("data", "model")})
+    assert isinstance(out["w"].sharding, NamedSharding)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.arange(16.0).reshape(4, 4))
+
+
+# ------------------------------------------------------------------ trainer
+
+def test_train_job_runs_and_loss_drops(tmp_path):
+    cfg = reduced_config(get_config("smollm_135m"))
+    job = TrainJob(cfg, TrainJobConfig(
+        arch="smollm_135m", steps=25, batch=8, seq_len=32, lr=3e-3,
+        checkpoint_dir=str(tmp_path), checkpoint_every=10),
+        make_local_mesh())
+    result = job.run()
+    assert result["completed"]
+    assert result["step"] == 25
+    first = np.mean(job.history[:5])
+    last = np.mean(job.history[-5:])
+    assert last < first, f"loss did not drop: {first} -> {last}"
+
+
+def test_preempt_checkpoint_resume(tmp_path):
+    """The PhoenixCloud FB kill becomes checkpoint-preempt: a preempted
+    job resumes from its checkpoint with the step counter intact."""
+    cfg = reduced_config(get_config("smollm_135m"))
+    jc = TrainJobConfig(arch="smollm_135m", steps=20, batch=4, seq_len=32,
+                        checkpoint_dir=str(tmp_path), checkpoint_every=5)
+    job = TrainJob(cfg, jc, make_local_mesh())
+    job.initialize()
+    job.jc = TrainJobConfig(**{**jc.__dict__, "steps": 8})
+    job.run()                      # run to step 8, checkpoints at 5 + final
+    job.checkpoint(block=True)
+    assert job.step == 8
+    # "Node failure": a brand-new process picks the job up.
+    job2 = TrainJob(cfg, jc, make_local_mesh())
+    job2.initialize()
+    assert job2.step == 8          # resumed, not restarted
+    result = job2.run()
+    assert result["completed"] and job2.step == 20
+
+
+# --------------------------------------------------------------------- data
+
+def test_data_determinism_and_shift():
+    cfg = reduced_config(get_config("smollm_135m"))
+    a = SyntheticLM(cfg, batch=4, seq_len=16, data_cfg=DataConfig(seed=1))
+    b = SyntheticLM(cfg, batch=4, seq_len=16, data_cfg=DataConfig(seed=1))
+    ba, bb = a.batch_at(42), b.batch_at(42)
+    np.testing.assert_array_equal(ba["tokens"], bb["tokens"])
+    np.testing.assert_array_equal(ba["labels"], bb["labels"])
+    assert not np.array_equal(ba["tokens"], a.batch_at(43)["tokens"])
+    assert ba["tokens"].max() < cfg.vocab
+
+
+# --------------------------------------------------------------- optimizers
+
+def _quadratic_losses(opt, steps=60):
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros((3,)), "m": jnp.zeros((2, 3))}
+
+    def loss_fn(p):
+        return jnp.sum((p["w"] - target) ** 2) + jnp.sum(p["m"] ** 2)
+
+    state = opt.init(params)
+    losses = []
+    for _ in range(steps):
+        g = jax.grad(loss_fn)(params)
+        params, state = opt.update(g, state, params, jnp.float32(0.1))
+        losses.append(float(loss_fn(params)))
+    return losses
+
+
+def test_adamw_converges():
+    losses = _quadratic_losses(adamw(weight_decay=0.0))
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_adafactor_converges_and_is_factored():
+    opt = adafactor()
+    losses = _quadratic_losses(opt)
+    assert losses[-1] < 0.2 * losses[0]
+    state = opt.init({"m": jnp.zeros((8, 16))})
+    assert state["v"]["m"]["vr"].shape == (8,)
+    assert state["v"]["m"]["vc"].shape == (16,)
+
+
+def test_optimizer_state_specs_match_structure():
+    from jax.sharding import PartitionSpec as P
+    opt = get_optimizer("adamw")
+    params = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+    pspecs = {"w": P("data", "model"), "b": P(None)}
+    sspecs = opt.state_specs(pspecs)
+    state = opt.init(params)
+    # Every state leaf has a spec leaf at the same path.
+    jax.tree.map(lambda *_: None, state,
+                 {"mu": params, "nu": params, "count": jnp.int32(0)})
+    assert sspecs["mu"]["w"] == P("data", "model")
+
+
+def test_worker_failure_is_loss_equivalent(tmp_path):
+    """Node-failure equivalence: worker A dies mid-run after its last
+    checkpoint; replacement worker B restores and replays the SAME
+    batches (step-indexed deterministic data) — the final loss history
+    from the checkpoint onward is identical to an uninterrupted run.
+    This is the straggler/failure-reassignment guarantee of DESIGN.md §5."""
+    cfg = reduced_config(get_config("smollm_135m"))
+    mk = lambda d, steps: TrainJobConfig(
+        arch="smollm_135m", steps=steps, batch=4, seq_len=32, lr=1e-3,
+        checkpoint_dir=d, checkpoint_every=10)
+    # Uninterrupted reference run.
+    ref = TrainJob(cfg, mk(str(tmp_path / "ref"), 20), make_local_mesh())
+    ref.run()
+    # Worker A: runs to step 13 (checkpointed at 10), then "dies" —
+    # steps 11-13 are lost work (a hard crash never writes a final
+    # checkpoint, so drop anything newer than step 10).
+    import shutil
+    a = TrainJob(cfg, mk(str(tmp_path / "ha"), 20), make_local_mesh())
+    a.jc = TrainJobConfig(**{**a.jc.__dict__, "steps": 13})
+    a.run()
+    for s in a.ckpt.all_steps():
+        if s > 10:
+            shutil.rmtree(str(tmp_path / "ha" / f"step_{s}"))
+    del a
+    # Worker B: fresh process, restores at 10, finishes the job.
+    b = TrainJob(cfg, mk(str(tmp_path / "ha"), 20), make_local_mesh())
+    result = b.run()
+    assert result["completed"] and b.step == 20
+    # Loss histories match exactly from the restore point onward.
+    np.testing.assert_allclose(b.history, ref.history[10:20], rtol=1e-5)

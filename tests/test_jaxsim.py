@@ -1,0 +1,41 @@
+"""JAX-native tick simulator: fidelity vs the event simulator + the
+paper's parameter trends, as one vmapped program."""
+
+import pytest
+
+from repro.core import jaxsim
+from repro.sim import traces
+from repro.sim.simulator import build_flb_nub, clone_jobs, run_sim
+
+
+@pytest.fixture(scope="module")
+def setup():
+    jobs = traces.nasa_ipsc(seed=0)
+    ws = traces.worldcup98(seed=0, peak_vms=128)
+    return jobs, ws
+
+
+def test_fidelity_vs_event_sim(setup):
+    jobs, ws = setup
+    T = traces.TWO_WEEKS
+    ref = run_sim(build_flb_nub(13, 12), clone_jobs(jobs), ws, T)
+    out = jaxsim.sweep([{"B": 25, "U": 1.2, "V": 0.2, "G": 0.5}],
+                       jobs, ws, T)[0]
+    assert abs(out["completed_jobs"] - ref.completed_jobs) <= 2
+    assert abs(out["node_hours"] - ref.node_hours) / ref.node_hours < 0.15
+    assert abs(out["peak_nodes"] - ref.peak_nodes) / ref.peak_nodes < 0.15
+
+
+def test_vmapped_paper_trends(setup):
+    """J1 (Fig 14): consumption grows and turnaround falls with B;
+    §6.6.4: turnaround grows with G — in one batched program."""
+    jobs, ws = setup
+    grid = [{"B": b, "U": 1.2, "V": 0.2, "G": 0.5} for b in (13, 51, 154)] \
+        + [{"B": 25, "U": 1.2, "V": 0.2, "G": g} for g in (0.25, 0.99)]
+    out = jaxsim.sweep(grid, jobs, ws, traces.TWO_WEEKS)
+    b_rows, g_rows = out[:3], out[3:]
+    assert b_rows[0]["node_hours"] < b_rows[1]["node_hours"] \
+        < b_rows[2]["node_hours"]                       # J1: nh grows w/ B
+    assert b_rows[0]["avg_turnaround"] > b_rows[2]["avg_turnaround"]
+    assert g_rows[0]["avg_turnaround"] < g_rows[1]["avg_turnaround"]  # G
+    assert all(r["completed_jobs"] >= 2600 for r in out)

@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) for the provisioning invariants.
+
+System invariants that must hold for ANY event sequence:
+  I1 (conservation)  allocations never exceed capacity; never negative.
+  I2 (WS priority)   after any FB event, WS holds exactly min(demand, C).
+  I3 (rigid bound)   FLB-NUB: PBJ never drops below... pool B is always
+                     held; PBJ owned ≥ 0; ledger internally consistent.
+  I4 (no lost jobs)  every submitted job is exactly one of: queued,
+                     running, or completed.
+  I5 (accounting)    node-hours integral is non-negative and peak ≥ any
+                     instantaneous allocation seen.
+"""
+
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.jobs import Job
+from repro.core.pbj_manager import PBJManager, PBJPolicyParams
+from repro.core.provision import FBProvisionService, FLBNUBProvisionService
+from repro.core.ws_manager import WSManager
+
+# One event: (kind, value) where kind ∈ submit/ws/tick/finish.
+event = st.one_of(
+    st.tuples(st.just("submit"),
+              st.tuples(st.integers(1, 40), st.floats(1, 5000))),
+    st.tuples(st.just("ws"), st.integers(0, 120)),
+    st.tuples(st.just("tick"), st.none()),
+    st.tuples(st.just("finish"), st.none()),
+)
+
+
+def _drive(svc, events, capacity=None):
+    pbj = svc.pbj
+    t = 0.0
+    jid = 0
+    submitted = []
+    pending_end = {}   # jid -> (end_time, epoch)
+
+    def pump(starts):
+        for s in starts:
+            pending_end[s.job.jid] = (s.end_time, s.epoch)
+
+    pump(svc.startup(0.0, ws_initial=0))
+    for kind, val in events:
+        t += 60.0
+        if kind == "submit":
+            size, rt = val
+            if capacity is not None:
+                size = min(size, capacity)
+            j = Job(jid, t, size, float(rt))
+            submitted.append(j)
+            jid += 1
+            pump(pbj.submit(t, j))
+        elif kind == "ws":
+            pump(svc.on_ws_demand(t, val))
+        elif kind == "tick":
+            pump(svc.on_lease_tick(t))
+        elif kind == "finish" and pending_end:
+            k = min(pending_end, key=lambda q: pending_end[q][0])
+            end, epoch = pending_end.pop(k)
+            _, starts = pbj.on_finish(max(t, end), k, epoch)
+            t = max(t, end)
+            pump(starts)
+        _check_core(svc, submitted, capacity)
+    return submitted
+
+
+def _check_core(svc, submitted, capacity):
+    c = svc.cluster
+    # I1: conservation.
+    assert c.total_allocated >= 0
+    if capacity is not None:
+        assert c.total_allocated <= capacity
+        assert c.idle >= 0
+    # I4: no lost jobs.
+    pbj = svc.pbj
+    for j in submitted:
+        in_q = any(q.jid == j.jid for q in pbj.queue)
+        running = j.jid in pbj.running
+        assert in_q + running + j.completed == 1, \
+            f"job {j.jid}: queued={in_q} running={running} done={j.completed}"
+    # PBJ internal consistency.
+    assert pbj.free >= 0
+    assert pbj.running.used() <= pbj.owned
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(event, min_size=1, max_size=60), st.integers(40, 150))
+def test_fb_invariants(events, capacity):
+    svc = FBProvisionService(capacity, PBJManager(), WSManager(),
+                             lease_seconds=3600)
+    _drive(svc, events, capacity=capacity)
+    # I2: WS priority — WS allocation tracks (capped) demand exactly.
+    assert svc.cluster.allocated("WS") == min(svc.ws.demand, capacity)
+    svc.cluster.finalize(1e7)
+    assert svc.cluster.node_hours >= 0
+    assert svc.cluster.peak <= capacity
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(event, min_size=1, max_size=60),
+       st.integers(1, 30), st.integers(1, 30))
+def test_flb_nub_invariants(events, lb_pbj, lb_ws):
+    svc = FLBNUBProvisionService(lb_pbj, lb_ws, PBJManager(), WSManager(),
+                                 lease_seconds=3600)
+    _drive(svc, events, capacity=None)
+    # I3: the pool is held in full at all times.
+    assert svc.cluster.allocated("POOL") == lb_pbj + lb_ws
+    assert 0 <= svc._pool_ws <= lb_ws
+    assert svc._pool_idle >= 0
+    # WS always satisfied: pool share + leased == demand (or demand small).
+    beyond = svc.cluster.allocated("WS")
+    assert svc._pool_ws + beyond == svc.ws.demand
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 20), st.floats(1, 100)),
+                min_size=1, max_size=30),
+       st.integers(5, 50))
+def test_first_fit_never_overcommits(jobs, owned):
+    m = PBJManager(params=PBJPolicyParams())
+    m.grant(0.0, owned)
+    for i, (size, rt) in enumerate(jobs):
+        m.submit(float(i), Job(i, float(i), size, rt))
+        assert m.running.used() <= m.owned
+        assert m.free >= 0

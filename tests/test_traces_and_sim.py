@@ -1,0 +1,111 @@
+"""Trace statistics + paper-claim integration tests (§6.5, §6.6)."""
+
+import numpy as np
+import pytest
+
+from repro.sim import traces
+from repro.sim.simulator import (build_dcs, build_ec2_rightscale, build_fb,
+                                 build_flb_nub, clone_jobs, run_sim)
+
+T = traces.TWO_WEEKS
+
+
+@pytest.fixture(scope="module")
+def ipsc():
+    return traces.nasa_ipsc(seed=0)
+
+
+@pytest.fixture(scope="module")
+def ws128():
+    return traces.worldcup98(seed=0, peak_vms=128)
+
+
+def test_ipsc_moments(ipsc):
+    util = sum(j.size * j.runtime for j in ipsc) / (128 * T)
+    assert util == pytest.approx(0.466, abs=1e-3)       # exact by design
+    assert len(ipsc) == 2603
+    mean_rt = np.mean([j.runtime for j in ipsc])
+    assert 400 < mean_rt < 700                          # ~573 target
+    assert max(j.size for j in ipsc) == 128
+    assert all(j.submit < T for j in ipsc)
+
+
+def test_blue_moments():
+    jobs = traces.sdsc_blue(seed=0)
+    util = sum(j.size * j.runtime for j in jobs) / (144 * T)
+    assert util == pytest.approx(0.762, abs=1e-3)
+    assert len(jobs) == 2657
+    mean_rt = np.mean([j.runtime for j in jobs])
+    assert 1500 < mean_rt < 2500                        # ~1975 target
+
+
+def test_worldcup_shape(ws128):
+    demands = [d for _, d in ws128]
+    assert max(demands) == 128                          # exact peak
+    assert min(demands) >= 1
+    assert np.mean(demands) < 50                        # high peak/normal
+
+
+def test_trace_determinism():
+    a = traces.nasa_ipsc(seed=3)
+    b = traces.nasa_ipsc(seed=3)
+    assert all(x.submit == y.submit and x.size == y.size
+               and x.runtime == y.runtime for x, y in zip(a, b))
+
+
+def test_scaling(ipsc):
+    half = traces.scale_jobs(ipsc, prc=64, prc0=128)
+    assert max(j.size for j in half) == 64
+
+
+# --------------------------------------------------- paper claims (scaled)
+
+def test_fb_claim_40pct_smaller_cluster(ipsc, ws128):
+    """§6.5.3: at ~60 % of the DCS configuration size, throughput matches
+    DCS (the '40 % saving at same throughput' headline)."""
+    dcs = run_sim(build_dcs(128, 128), clone_jobs(ipsc), ws128, T)
+    fb = run_sim(build_fb(int(256 * 0.6)), clone_jobs(ipsc), ws128, T)
+    assert fb.completed_jobs >= 0.97 * dcs.completed_jobs
+    assert fb.peak_nodes <= int(256 * 0.6)
+
+
+def test_fb_small_config_starves_only_big_jobs(ipsc, ws128):
+    """PhoenixCloud(128) on (128,128): only the full-machine jobs fail
+    (the paper's Table 1 shows 2549/2603)."""
+    fb = run_sim(build_fb(128), clone_jobs(ipsc), ws128, T)
+    n_full = sum(1 for j in ipsc if j.size == 128)
+    assert fb.completed_jobs >= len(ipsc) - n_full - 60
+
+
+def test_flb_nub_beats_ec2_on_consumption(ipsc, ws128):
+    """§6.6.3: PhoenixCloud total and peak resource consumption are below
+    EC2+RightScale; EC2 has zero queueing (turnaround == execution)."""
+    pc = run_sim(build_flb_nub(13, 12), clone_jobs(ipsc), ws128, T)
+    ec2 = run_sim(build_ec2_rightscale(), clone_jobs(ipsc), ws128, T)
+    assert pc.node_hours < ec2.node_hours
+    assert pc.peak_nodes < 0.75 * ec2.peak_nodes
+    assert ec2.avg_turnaround == pytest.approx(ec2.avg_execution)
+    assert pc.avg_turnaround >= ec2.avg_turnaround      # the paper's cost
+    # Management overhead: EC2 users adjust per-job; PhoenixCloud batches.
+    assert pc.adjust_events < ec2.adjust_events
+
+
+def test_lease_unit_vs_overhead(ipsc, ws128):
+    """Fig. 18: management overhead is inversely proportional to L."""
+    short = run_sim(build_flb_nub(13, 12, lease_seconds=900),
+                    clone_jobs(ipsc), ws128, T)
+    long_ = run_sim(build_flb_nub(13, 12, lease_seconds=7200),
+                    clone_jobs(ipsc), ws128, T)
+    assert short.adjust_events > long_.adjust_events
+
+
+def test_checkpoint_preempt_beats_kill(ipsc, ws128):
+    """Beyond-paper: checkpoint-preempt cuts lost work vs the paper's
+    kill-restart under the FB policy (same trace, same capacity)."""
+    from repro.core.pbj_manager import PBJPolicyParams
+    kill = run_sim(build_fb(150), clone_jobs(ipsc), ws128, T)
+    ckpt = run_sim(build_fb(150, params=PBJPolicyParams(
+        checkpoint_preempt=True)), clone_jobs(ipsc), ws128, T)
+    assert ckpt.completed_jobs >= kill.completed_jobs
+    if kill.kills:
+        assert ckpt.avg_turnaround <= kill.avg_turnaround * 1.05
