@@ -13,8 +13,8 @@ from typing import Dict, List
 
 from repro.core.pbj_manager import PBJPolicyParams
 from repro.sim import traces
-from repro.sim.simulator import (build_dcs, build_ec2_rightscale, build_fb,
-                                 build_flb_nub, clone_jobs, run_sim)
+from repro.sim.engine import (build_dcs, build_ec2_rightscale, build_fb,
+                              build_flb_nub, clone_jobs, run_sim)
 
 T = traces.TWO_WEEKS
 SEED = 0
@@ -252,6 +252,30 @@ ALL_TABLES = {
     "fig_8_9": fig_8_9,
     "ablation_preempt": ablation_preempt,
 }
+
+
+# ------------------------------ Figs 13/14/18: the unified sweep engine
+
+def sweep_fig_13_14_18() -> List[Dict]:
+    """The paper's three headline sweeps — capacity C (Fig. 13), pool
+    size B (Fig. 14), lease unit L vs EC2+RightScale (Fig. 18) — as ONE
+    ``run_sweep`` call per trace (21 points each): DCS and EC2 points go
+    through the vectorized jnp fast path, the two stateful PhoenixCloud
+    policies through the event engine."""
+    from repro.sim.sweep import paper_grid, run_sweep
+    out = []
+    for trace in ("ipsc", "blue"):
+        prc0 = _PRC0[trace]
+        jobs, ws = _workload(trace, prc0, prc0), _ws(128)
+        for row in run_sweep(paper_grid(prc0, 128,
+                                        params=_baseline_params()),
+                             jobs, ws, T):
+            row["trace"] = trace
+            out.append(row)
+    return out
+
+
+ALL_TABLES["sweep_fig_13_14_18"] = sweep_fig_13_14_18
 
 
 # ------------------------------------- beyond-paper: vmapped param sweep

@@ -8,8 +8,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.pbj_manager import PBJPolicyParams
 from repro.sim import traces
-from repro.sim.simulator import (build_dcs, build_ec2_rightscale, build_fb,
-                                 build_flb_nub, clone_jobs, run_sim)
+from repro.sim.engine import (build_dcs, build_ec2_rightscale, build_fb,
+                              build_flb_nub, clone_jobs, run_sim)
 
 T = traces.TWO_WEEKS
 HDR = (f"{'system':26s} {'jobs':>5s} {'exec(s)':>8s} {'turn(s)':>8s} "

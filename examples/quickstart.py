@@ -18,7 +18,7 @@ from repro.core.spec import (CoordinationModel, Granularity, Relationship,
                              SetupPolicy, WorkloadType)
 from repro.core.ws_manager import WSManager
 from repro.sim import traces
-from repro.sim.simulator import build_dcs, clone_jobs, run_sim
+from repro.sim.engine import build_dcs, clone_jobs, run_sim
 
 # 1. Runtime-environment specifications.
 pbj_spec = RuntimeEnvironmentSpec(

@@ -1,0 +1,40 @@
+"""Version-compat shims for the JAX API surface we use.
+
+``shard_map`` moved twice across JAX releases: it lives at
+``jax.experimental.shard_map.shard_map`` (with a ``check_rep`` kwarg)
+up to ~0.4.x and graduates to ``jax.shard_map`` (kwarg renamed
+``check_vma``) in newer releases. Import it from here so model and test
+code runs on both.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    _shard_map = jax.shard_map            # jax >= 0.6 top-level API
+    _CHECK_KWARG = "check_vma"
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KWARG = "check_rep"
+
+__all__ = ["shard_map", "axis_size"]
+
+
+def axis_size(axis: str) -> int:
+    """Static size of a named mesh axis, from inside ``shard_map``.
+
+    ``jax.lax.axis_size`` only exists in newer releases; on older ones
+    ``psum(1, axis)`` of a Python constant folds to a static int.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` with the replication-check kwarg normalized to
+    the new-API name (``check_vma``); ``None`` keeps the default."""
+    kwargs = {} if check_vma is None else {_CHECK_KWARG: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)

@@ -9,6 +9,10 @@
   individually at submission, runs immediately (no queue, no scheduler),
   and releases only at the next lease-unit boundary after completion
   (§6.6.2 — EC2 bills whole hours and users can't predict completions).
+
+Both are concrete ``ProvisioningSystem``s (core/system.py), so the event
+engine drives them through the same lifecycle protocol as the two
+PhoenixCloud services.
 """
 
 from __future__ import annotations
@@ -18,14 +22,15 @@ from typing import List
 from repro.core.cluster import Cluster, ceil_to_lease
 from repro.core.jobs import Job
 from repro.core.pbj_manager import PBJManager, Started
+from repro.core.system import ProvisioningSystem
 from repro.core.ws_manager import WSManager
 
 
-class DCSSystem:
+class DCSSystem(ProvisioningSystem):
     """Static partition baseline (§6.5.1)."""
 
     def __init__(self, prc_pbj: int, prc_ws: int, pbj: PBJManager,
-                 ws: WSManager):
+                 ws: WSManager, lease_seconds: float = 3600.0):
         self.cluster = Cluster(prc_pbj + prc_ws)
         self.cluster.register(pbj.name)
         self.cluster.register(ws.name)
@@ -33,6 +38,7 @@ class DCSSystem:
         self.ws = ws
         self.prc_pbj = prc_pbj
         self.prc_ws = prc_ws
+        self.lease_seconds = lease_seconds
 
     def startup(self, t: float, ws_initial: int = 0) -> List[Started]:
         del ws_initial  # static: WS owns its full partition regardless
@@ -49,7 +55,7 @@ class DCSSystem:
         return []
 
 
-class EC2RightScaleSystem:
+class EC2RightScaleSystem(ProvisioningSystem):
     """EC2 + RightScale baseline (§6.6.1)."""
 
     def __init__(self, pbj: PBJManager, ws: WSManager,
@@ -80,21 +86,15 @@ class EC2RightScaleSystem:
     def submit(self, t: float, job: Job) -> List[Started]:
         """End user leases nodes and the job starts immediately."""
         self.cluster.allocate(t, self.pbj.name, job.size)
-        job.start = t
-        end = t + job.runtime
-        self.pbj._next_epoch += 1
-        self.pbj._epochs[job.jid] = self.pbj._next_epoch
-        self.pbj.running.add(job, end)
-        self.pbj.owned += job.size
-        return [Started(job, end, self.pbj._next_epoch)]
+        return [self.pbj.start_immediately(t, job)]
 
-    def on_finish(self, t: float, jid: int, epoch: int):
+    def on_finish(self, t: float, jid: int, epoch: int) -> List[Started]:
         job, starts = self.pbj.on_finish(t, jid, epoch)
         if job is not None:
             # §6.6.2: resources released at the end of the lease unit.
             release_at = ceil_to_lease(t, self.lease_seconds)
             self._pending_release.append((release_at, job.size))
-        return job, starts
+        return starts
 
     def on_lease_tick(self, t: float) -> List[Started]:
         due = [(rt, n) for rt, n in self._pending_release if rt <= t + 1e-6]

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.jobs import Job
+from repro.core.profiles import per_tick_profile
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,11 +59,7 @@ def pack_trace(jobs: Sequence[Job], ws_trace: Sequence[Tuple[float, int]],
     submit = np.array([j.submit for j in jobs], np.float32)
     size = np.array([j.size for j in jobs], np.float32)
     runtime = np.array([j.runtime for j in jobs], np.float32)
-    times = [t for t, _ in ws_trace]
-    vals = [d for _, d in ws_trace]
-    idx = np.searchsorted(times, np.arange(n_steps) * dt,
-                          side="right") - 1
-    ws = np.array(vals, np.float32)[np.clip(idx, 0, len(vals) - 1)]
+    ws = per_tick_profile(ws_trace, duration, dt)[:n_steps].astype(np.float32)
     return (jnp.asarray(submit), jnp.asarray(size), jnp.asarray(runtime),
             jnp.asarray(ws), n_steps)
 

@@ -79,6 +79,19 @@ class PBJManager:
         self.queue.push(job)
         return self.schedule(t)
 
+    def start_immediately(self, t: float, job: Job) -> Started:
+        """Grant the job its own nodes and start it, bypassing the queue.
+
+        The EC2 per-user leasing model (§6.6.1): each end user leases
+        exactly ``job.size`` nodes at submission, so the manager's owned
+        count grows by the job's size and the job runs at once. This is
+        the public API for queue-less systems — completion bookkeeping
+        (epochs, running set, ``on_finish``) stays consistent with the
+        scheduled path.
+        """
+        self.owned += job.size
+        return self._start(t, job)
+
     def on_finish(self, t: float, jid: int, epoch: int) -> Tuple[Optional[Job], List[Started]]:
         """Handle a completion event; stale events (killed job) are no-ops."""
         if jid not in self.running or self._epochs.get(jid) != epoch:

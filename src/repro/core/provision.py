@@ -25,12 +25,13 @@ from typing import List
 
 from repro.core.cluster import Cluster
 from repro.core.pbj_manager import PBJManager, Started
+from repro.core.system import ProvisioningSystem
 from repro.core.ws_manager import WSManager
 
 POOL = "POOL"   # ledger name for the permanently-held coordinated pool
 
 
-class FBProvisionService:
+class FBProvisionService(ProvisioningSystem):
     """Fixed Bound model (§5.1): capacity C, WS-priority with kills."""
 
     def __init__(self, capacity: int, pbj: PBJManager, ws: WSManager,
@@ -87,7 +88,7 @@ class FBProvisionService:
         return []
 
 
-class FLBNUBProvisionService:
+class FLBNUBProvisionService(ProvisioningSystem):
     """Fixed Lower Bound / No Upper Bound model (§5.2)."""
 
     def __init__(self, lb_pbj: int, lb_ws: int, pbj: PBJManager,

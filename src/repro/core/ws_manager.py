@@ -19,6 +19,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
+from repro.core.profiles import windowed_mean
+
 
 @dataclasses.dataclass(frozen=True)
 class InstanceAdjustmentPolicy:
@@ -64,10 +66,8 @@ class WSManager:
     def observe_utilization(self, t: float, utilization: float) -> Optional[int]:
         """Feed a utilization sample; returns new instance count on change."""
         self._util_samples.append((t, utilization))
-        w = self.policy.window_seconds
-        self._util_samples = [(ts, u) for ts, u in self._util_samples
-                              if ts >= t - w]
-        avg = sum(u for _, u in self._util_samples) / len(self._util_samples)
+        avg, self._util_samples = windowed_mean(
+            self._util_samples, t, self.policy.window_seconds)
         delta = self.policy.decide(self.instances, avg)
         if delta != 0:
             self.instances += delta

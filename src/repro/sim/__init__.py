@@ -1,10 +1,22 @@
-from repro.sim.simulator import (SimResult, build_dcs, build_ec2_rightscale,
-                                 build_fb, build_flb_nub, run_sim)
+from repro.sim.engine import (SimResult, build_dcs, build_ec2_rightscale,
+                              build_fb, build_flb_nub, clone_jobs, run_sim)
 from repro.sim.traces import (TraceSpec, nasa_ipsc, scale_jobs, sdsc_blue,
                               worldcup98)
 
 __all__ = [
-    "SimResult", "run_sim", "build_dcs", "build_fb", "build_flb_nub",
-    "build_ec2_rightscale", "TraceSpec", "nasa_ipsc", "sdsc_blue",
-    "worldcup98", "scale_jobs",
+    "SimResult", "run_sim", "clone_jobs", "build_dcs", "build_fb",
+    "build_flb_nub", "build_ec2_rightscale", "SweepPoint", "run_sweep",
+    "paper_grid", "TraceSpec", "nasa_ipsc", "sdsc_blue", "worldcup98",
+    "scale_jobs",
 ]
+
+_SWEEP_NAMES = ("SweepPoint", "run_sweep", "paper_grid")
+
+
+def __getattr__(name):
+    # Lazy: the sweep engine pulls in jax; the event engine and traces
+    # stay importable with numpy alone.
+    if name in _SWEEP_NAMES:
+        from repro.sim import sweep
+        return getattr(sweep, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,16 +1,24 @@
-"""Discrete-event simulator wiring traces to systems (§6.3, §6.5, §6.6).
+"""Discrete-event engine driving any ``ProvisioningSystem`` (§6.3, §6.5).
 
-Four systems are supported, mirroring the paper's comparison matrix:
+The engine is a plain event heap (submit / finish / ws-demand / lease
+tick) over the five-event lifecycle protocol of
+:class:`repro.core.system.ProvisioningSystem` — it is policy-free and
+knows nothing about any concrete system. All metrics are measured over
+the trace duration, exactly as §6.1 prescribes ("all performance metrics
+are obtained in the same period that is the duration of workload
+traces").
+
+The four paper systems (§6.3, §6.5, §6.6) are constructed by the
+``build_*`` helpers:
 
   * DCS                — static partition (``core.baselines.DCSSystem``)
   * PhoenixCloud FB    — §5.1 (``core.provision.FBProvisionService``)
   * PhoenixCloud FLB-NUB — §5.2 (``core.provision.FLBNUBProvisionService``)
   * EC2+RightScale     — §6.6.1 (``core.baselines.EC2RightScaleSystem``)
 
-The engine is a plain event heap (submit / finish / ws-demand / lease
-tick). All metrics are measured over the trace duration, exactly as §6.1
-prescribes ("all performance metrics are obtained in the same period that
-is the duration of workload traces").
+Parameter *sweeps* over grids of systems live in ``repro.sim.sweep``,
+which batches the stateless systems as vectorized JAX programs and falls
+back to this engine for the stateful PhoenixCloud policies.
 """
 
 from __future__ import annotations
@@ -24,6 +32,7 @@ from repro.core.baselines import DCSSystem, EC2RightScaleSystem
 from repro.core.jobs import Job
 from repro.core.pbj_manager import PBJManager, PBJPolicyParams, Started
 from repro.core.provision import FBProvisionService, FLBNUBProvisionService
+from repro.core.system import ProvisioningSystem
 from repro.core.ws_manager import WSManager
 
 # Event kinds (ordering key breaks simultaneity deterministically:
@@ -61,8 +70,10 @@ def clone_jobs(jobs: Sequence[Job]) -> List[Job]:
 
 # ------------------------------------------------------------ system builders
 
-def build_dcs(prc_pbj: int, prc_ws: int) -> DCSSystem:
-    return DCSSystem(prc_pbj, prc_ws, PBJManager(), WSManager())
+def build_dcs(prc_pbj: int, prc_ws: int,
+              lease_seconds: float = 3600.0) -> DCSSystem:
+    return DCSSystem(prc_pbj, prc_ws, PBJManager(), WSManager(),
+                     lease_seconds)
 
 
 def build_fb(capacity: int, lease_seconds: float = 3600.0,
@@ -84,12 +95,22 @@ def build_ec2_rightscale(lease_seconds: float = 3600.0) -> EC2RightScaleSystem:
 
 # ----------------------------------------------------------------- the engine
 
-def run_sim(system, jobs: Sequence[Job], ws_trace: Sequence[Tuple[float, int]],
+def default_duration(jobs: Sequence[Job],
+                     ws_trace: Sequence[Tuple[float, int]]) -> float:
+    """§6.1 measurement horizon when none is given: just past the last
+    trace event (shared by ``run_sim`` and the sweep engine)."""
+    return max([j.submit for j in jobs] + [t for t, _ in ws_trace]) + 1
+
+
+def run_sim(system: ProvisioningSystem, jobs: Sequence[Job],
+            ws_trace: Sequence[Tuple[float, int]],
             duration: Optional[float] = None, name: str = "",
             lease_seconds: Optional[float] = None) -> SimResult:
-    lease = lease_seconds or getattr(system, "lease_seconds", 3600.0)
+    lease = lease_seconds if lease_seconds is not None else system.lease_seconds
+    if lease <= 0:
+        raise ValueError(f"lease_seconds must be > 0, got {lease}")
     if duration is None:
-        duration = max([j.submit for j in jobs] + [t for t, _ in ws_trace]) + 1
+        duration = default_duration(jobs, ws_trace)
     seq = itertools.count()
     heap: List[Tuple[float, int, int, object]] = []
 
@@ -116,21 +137,15 @@ def run_sim(system, jobs: Sequence[Job], ws_trace: Sequence[Tuple[float, int]],
 
     push_starts(system.startup(0.0, ws_initial=ws_initial))
 
-    submit = getattr(system, "submit", None) or \
-        (lambda t, job: system.pbj.submit(t, job))
-    on_finish = getattr(system, "on_finish", None) or \
-        (lambda t, jid, epoch: system.pbj.on_finish(t, jid, epoch))
-
     while heap:
         t, kind, _, payload = heapq.heappop(heap)
         if t > duration + 1e-9:
             break
         if kind == _SUBMIT:
-            push_starts(submit(t, payload))
+            push_starts(system.submit(t, payload))
         elif kind == _FINISH:
             jid, epoch = payload
-            _, starts = on_finish(t, jid, epoch)
-            push_starts(starts)
+            push_starts(system.on_finish(t, jid, epoch))
         elif kind == _WS:
             push_starts(system.on_ws_demand(t, payload))
         elif kind == _TICK:
@@ -148,6 +163,6 @@ def run_sim(system, jobs: Sequence[Job], ws_trace: Sequence[Tuple[float, int]],
         peak_nodes=system.cluster.peak,
         adjust_events=system.cluster.adjust_events(),
         pbj_adjust_events=system.cluster.adjust_events(system.pbj.name),
-        kills=getattr(system.pbj, "kill_count", 0),
+        kills=system.pbj.kill_count,
         jobs=list(jobs),
     )

@@ -1,0 +1,292 @@
+"""Parameter-sweep engine — the paper's evaluation methodology at scale.
+
+The headline results of the paper are *sweeps*: Fig. 13 sweeps the
+private-cloud capacity C to find the ~40 % configuration-size reduction,
+Fig. 14 sweeps the coordinated-pool size B, and Fig. 18 sweeps the lease
+time unit L against EC2+RightScale. ``run_sweep`` evaluates a whole grid
+of :class:`SweepPoint`s — mixing all four systems — in one call.
+
+Two execution paths:
+
+  * **Vectorized fast path** (DCS and EC2+RightScale). Both baselines
+    are *stateless* given the trace — DCS is a static partition (its
+    cost/peak curve is closed-form arithmetic over the grid) and the
+    EC2 allocation curve is a pure function of (submit, runtime, L)
+    evaluated for ALL sweep points at once as batched ``jnp`` array
+    ops (``jax.vmap``): the trace's WS demand change points are
+    extracted and integrated once (``core.profiles``), job release
+    ticks for every lease value are a broadcasted rounding to lease
+    boundaries, node-hours is the WS integral plus each job's
+    size·(release − submit) span, and peak consumption is a
+    cumulative-max over the merged, time-sorted event deltas.
+    The arithmetic runs in float64 (``jax.experimental.enable_x64``) so
+    results agree with the event engine to round-off — node-hours match
+    to < 1e-9 relative and every integer metric (peak nodes, completed
+    jobs, adjust events) matches exactly (tests/test_sweep.py).
+
+  * **Event-engine fallback** (PhoenixCloud FB and FLB-NUB). The two
+    coordinated policies are stateful — kills, queue contents and U/V/G
+    adjustments feed back into the allocation — so each point runs
+    through ``repro.sim.engine.run_sim`` on its own clone of the trace.
+
+The vectorized path replicates the event engine's semantics exactly,
+including its tie-breaking: at a shared timestamp, WS demand changes
+apply before lease-tick releases, and releases before submits. A job
+finishing precisely on a tick boundary is therefore released one full
+lease later (the tick event sorts before the finish event).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core.jobs import Job
+from repro.core.pbj_manager import PBJPolicyParams
+from repro.core.profiles import step_integral, step_points
+from repro.sim.engine import (_SUBMIT, _TICK, _WS, build_dcs,
+                              build_ec2_rightscale, build_fb, build_flb_nub,
+                              clone_jobs, default_duration, run_sim)
+
+__all__ = ["SweepPoint", "run_sweep", "paper_grid"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One (system, parameter) point of a sweep grid.
+
+    ``system`` selects the provisioning system; the remaining fields are
+    that system's knobs (unused ones are ignored): ``capacity`` is the
+    Fig.-13 sweep variable C, ``lb_pbj + lb_ws`` the Fig.-14 pool size
+    B, and ``lease_seconds`` the Fig.-18 lease unit L.
+    """
+
+    system: str                       # "dcs" | "fb" | "flb_nub" | "ec2"
+    prc_pbj: int = 0                  # dcs: static PBJ partition
+    prc_ws: int = 0                   # dcs: static WS partition
+    capacity: int = 0                 # fb: private-cloud capacity C
+    lb_pbj: int = 0                   # flb_nub: PBJ lower bound
+    lb_ws: int = 0                    # flb_nub: WS lower bound
+    lease_seconds: float = 3600.0     # all: lease time unit L
+    params: PBJPolicyParams = PBJPolicyParams()
+    label: str = ""
+
+    def name(self) -> str:
+        if self.label:
+            return self.label
+        return {
+            "dcs": f"DCS({self.prc_pbj}+{self.prc_ws})",
+            "fb": f"FB(C={self.capacity})",
+            "flb_nub": f"FLB-NUB(B={self.lb_pbj + self.lb_ws})",
+            "ec2": f"EC2+RightScale(L={self.lease_seconds:g}s)",
+        }[self.system]
+
+
+def _build(p: SweepPoint):
+    if p.system == "dcs":
+        return build_dcs(p.prc_pbj, p.prc_ws, p.lease_seconds)
+    if p.system == "fb":
+        return build_fb(p.capacity, p.lease_seconds, p.params)
+    if p.system == "flb_nub":
+        return build_flb_nub(p.lb_pbj, p.lb_ws, p.lease_seconds, p.params)
+    if p.system == "ec2":
+        return build_ec2_rightscale(p.lease_seconds)
+    raise ValueError(f"unknown system {p.system!r}")
+
+
+# ------------------------------------------------------- vectorized baselines
+
+def _sweep_dcs(points: List[SweepPoint], duration: float) -> List[Dict]:
+    """All DCS points at once: the partition is static, so the cost curve
+    is an affine function of the configuration size.
+
+    Vectorized DCS rows carry the cost/peak metrics only — job metrics
+    (completed jobs, turnaround) depend on the first-fit queue dynamics
+    and need the event engine (``run_sweep(..., vectorize=False)``).
+    """
+    rows = []
+    for p in points:
+        size = p.prc_pbj + p.prc_ws
+        rows.append({
+            "system": p.name(), "system_kind": "dcs", "engine": "vectorized",
+            "lease_seconds": p.lease_seconds,
+            "node_hours": size * duration / 3600.0,
+            "peak_nodes": size,
+            "adjust_events": int(p.prc_ws > 0) + int(p.prc_pbj > 0),
+            "pbj_adjust_events": int(p.prc_pbj > 0),
+            "kills": 0,
+        })
+    return rows
+
+
+def _sweep_ec2(points: List[SweepPoint], jobs: Sequence[Job],
+               ws_trace: Sequence[Tuple[float, int]],
+               duration: float) -> List[Dict]:
+    """All EC2+RightScale points (one per lease value) as batched jnp ops.
+
+    Per job j and lease L: the job allocates ``size_j`` on
+    ``[submit_j, rel_j)`` where ``rel_j`` is the first lease tick
+    *strictly after* its completion (§6.6.2 whole-hour billing plus the
+    engine's tick-before-finish tie order), clipped to the trace
+    duration when the tick never fires. The WS curve replays the demand
+    trace verbatim and is lease-independent.
+    """
+    ws_t64, ws_v64 = step_points(ws_trace, duration)
+    ws_node_seconds = step_integral(ws_t64, ws_v64, duration)
+    ws_deltas64 = np.concatenate([ws_v64[:1], np.diff(ws_v64)])
+    ws_adjusts = int(np.count_nonzero(ws_deltas64))
+
+    with enable_x64():
+        submit = jnp.asarray([j.submit for j in jobs], jnp.float64)
+        size = jnp.asarray([j.size for j in jobs], jnp.float64)
+        runtime = jnp.asarray([j.runtime for j in jobs], jnp.float64)
+        end = submit + runtime
+        in_trace = submit <= duration + 1e-9     # engine drops later submits
+        finishes = in_trace & (end <= duration + 1e-9)
+
+        L = jnp.asarray([p.lease_seconds for p in points],
+                        jnp.float64)[:, None]                  # (P, 1)
+        # First tick strictly after the finish event (see module doc).
+        # A tick exists only while k·L <= duration — the engine's strict
+        # scheduling comparison, mirrored here without tolerance.
+        rel = (jnp.floor(end / L) + 1.0) * L                   # (P, J)
+        fired = in_trace & (rel <= duration)
+        rel_eff = jnp.where(fired, rel, duration)
+        pbj_ns = jnp.sum(jnp.where(in_trace, size * (rel_eff - submit), 0.0),
+                         axis=1)
+        node_hours = (pbj_ns + ws_node_seconds) / 3600.0
+
+        # Peak: merge WS steps, submits (+size) and releases (−size) and
+        # take the cumulative max of the running total. Tie order at one
+        # timestamp follows the engine's event kinds (releases happen
+        # inside tick events).
+        ws_t, ws_d = jnp.asarray(ws_t64), jnp.asarray(ws_deltas64)
+        n_ws, n_j = ws_t.shape[0], submit.shape[0]
+        ev_t = jnp.concatenate([ws_t, submit, jnp.zeros(n_j)])  # rel filled per point
+        ev_kind = jnp.concatenate([jnp.full(n_ws, float(_WS)),
+                                   jnp.full(n_j, float(_SUBMIT)),
+                                   jnp.full(n_j, float(_TICK))])
+        base_delta = jnp.concatenate(
+            [ws_d, jnp.where(in_trace, size, 0.0), jnp.zeros(n_j)])
+
+        def peak_one(rel_row, fired_row):
+            t = ev_t.at[n_ws + n_j:].set(rel_row)
+            delta = base_delta.at[n_ws + n_j:].set(
+                jnp.where(fired_row, -size, 0.0))
+            order = jnp.lexsort((ev_kind, t))
+            running = jnp.cumsum(delta[order])
+            return jnp.maximum(jnp.max(running), 0.0)
+
+        peak = jax.vmap(peak_one)(rel, fired)
+
+        completed = jnp.sum(finishes)
+        sum_rt = jnp.sum(jnp.where(finishes, runtime, 0.0))
+        n_released = jnp.sum(fired, axis=1)
+        n_submitted = jnp.sum(in_trace)
+
+    n_completed = int(completed)
+    avg_rt = float(sum_rt) / n_completed if n_completed else 0.0
+    rows = []
+    for i, p in enumerate(points):
+        pbj_adjusts = int(n_submitted) + int(n_released[i])
+        rows.append({
+            "system": p.name(), "system_kind": "ec2", "engine": "vectorized",
+            "lease_seconds": p.lease_seconds,
+            "node_hours": float(node_hours[i]),
+            "peak_nodes": int(round(float(peak[i]))),
+            "completed_jobs": n_completed,
+            "avg_turnaround": avg_rt,        # EC2 never queues (§6.6.1)
+            "avg_execution": avg_rt,
+            "adjust_events": pbj_adjusts + ws_adjusts,
+            "pbj_adjust_events": pbj_adjusts,
+            "kills": 0,
+        })
+    return rows
+
+
+# --------------------------------------------------------------- the sweep
+
+def run_sweep(points: Sequence[SweepPoint], jobs: Sequence[Job],
+              ws_trace: Sequence[Tuple[float, int]],
+              duration: Optional[float] = None,
+              vectorize: bool = True) -> List[Dict]:
+    """Evaluate every sweep point on the same (jobs, ws_trace) workload.
+
+    Returns one row dict per point, in input order, each tagged with
+    ``engine`` = ``"vectorized"`` (batched jnp fast path) or
+    ``"event"`` (per-point discrete-event run). Event rows carry the
+    full ``SimResult`` metric set; vectorized DCS rows carry cost/peak
+    metrics only (use ``.get`` or ``vectorize=False`` when job metrics
+    are needed for a DCS point). With ``vectorize=False`` every point
+    runs through the event engine — the cross-validation mode used by
+    tests/test_sweep.py.
+    """
+    if duration is None:
+        duration = default_duration(jobs, ws_trace)
+    rows: List[Optional[Dict]] = [None] * len(points)
+
+    if vectorize:
+        dcs_idx = [i for i, p in enumerate(points) if p.system == "dcs"]
+        ec2_idx = [i for i, p in enumerate(points) if p.system == "ec2"]
+        if dcs_idx:
+            for i, row in zip(dcs_idx,
+                              _sweep_dcs([points[i] for i in dcs_idx],
+                                         duration)):
+                rows[i] = row
+        if ec2_idx:
+            for i, row in zip(ec2_idx,
+                              _sweep_ec2([points[i] for i in ec2_idx],
+                                         jobs, ws_trace, duration)):
+                rows[i] = row
+
+    for i, p in enumerate(points):
+        if rows[i] is not None:
+            continue
+        r = run_sim(_build(p), clone_jobs(jobs), ws_trace, duration,
+                    name=p.name())
+        row = r.row()
+        row.update(system_kind=p.system, engine="event",
+                   lease_seconds=p.lease_seconds)
+        rows[i] = row
+    return rows                                   # type: ignore[return-value]
+
+
+# ------------------------------------------------------------- paper grids
+
+def paper_grid(prc_pbj: int, prc_ws: int = 128,
+               capacity_fracs: Sequence[float] = (0.5, 0.6, 0.75, 0.9, 1.0),
+               B_values: Sequence[int] = (13, 25, 51, 102, 154),
+               lease_minutes: Sequence[int] = (15, 30, 60, 120, 240),
+               fig18_B: int = 25, lb_ws: int = 12,
+               params: PBJPolicyParams = PBJPolicyParams()
+               ) -> List[SweepPoint]:
+    """The Fig. 13 + Fig. 14 + Fig. 18 grids as one sweep (21 points).
+
+    Fig. 13: FB capacity C as a fraction of the DCS configuration size
+    (plus the DCS reference). Fig. 14: FLB-NUB pool size B. Fig. 18:
+    lease unit L for both FLB-NUB and the EC2+RightScale baseline.
+    """
+    dcs_size = prc_pbj + prc_ws
+    pts = [SweepPoint("dcs", prc_pbj=prc_pbj, prc_ws=prc_ws,
+                      label=f"DCS({dcs_size})")]
+    for f in capacity_fracs:
+        c = int(round(dcs_size * f))
+        pts.append(SweepPoint("fb", capacity=c, params=params,
+                              label=f"FB(C={c})"))
+    for B in B_values:
+        w = min(lb_ws, B - 1)
+        pts.append(SweepPoint("flb_nub", lb_pbj=B - w, lb_ws=w,
+                              params=params, label=f"FLB-NUB(B={B})"))
+    for m in lease_minutes:
+        w = min(lb_ws, fig18_B - 1)
+        pts.append(SweepPoint("flb_nub", lb_pbj=fig18_B - w, lb_ws=w,
+                              lease_seconds=60.0 * m, params=params,
+                              label=f"FLB-NUB(L={m}min)"))
+        pts.append(SweepPoint("ec2", lease_seconds=60.0 * m,
+                              label=f"EC2(L={m}min)"))
+    return pts

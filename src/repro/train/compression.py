@@ -29,7 +29,8 @@ import jax.numpy as jnp
 
 
 def _axis_size(axis: str) -> int:
-    return jax.lax.axis_size(axis)
+    from repro.compat import axis_size
+    return axis_size(axis)
 
 
 def quantize_int8(y: jax.Array, axis: str) -> Tuple[jax.Array, jax.Array]:

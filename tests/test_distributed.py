@@ -28,11 +28,12 @@ def test_int8_ef_allreduce_matches_psum():
     out = _run8("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, PartitionSpec as P
+        from repro.compat import shard_map
         from repro.train import compression as C
         mesh = Mesh(np.array(jax.devices()).reshape(8), ("dp",))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 4096)) * 2.0
         e = jnp.zeros_like(g)
-        fn = jax.jit(jax.shard_map(
+        fn = jax.jit(shard_map(
             lambda g, e: C.ef_allreduce_mean(g, e, "dp"),
             mesh=mesh, in_specs=(P("dp"), P("dp")),
             out_specs=(P("dp"), P("dp")), check_vma=False))

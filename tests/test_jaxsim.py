@@ -5,7 +5,7 @@ import pytest
 
 from repro.core import jaxsim
 from repro.sim import traces
-from repro.sim.simulator import build_flb_nub, clone_jobs, run_sim
+from repro.sim.engine import build_flb_nub, clone_jobs, run_sim
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,102 @@
+"""FLB-NUB coordinated-pool accounting invariants (§5.2).
+
+Property-style tests over randomized demand/submit/tick/finish
+sequences, using only stdlib ``random`` so they run even when
+``hypothesis`` is absent (it is an optional dev dependency). Invariants
+checked after EVERY event:
+
+  P1  0 <= _pool_ws <= lb_ws          (WS within-pool share bounded)
+  P2  _pool_idle >= 0                 (pool never oversubscribed)
+  P3  _pool_pbj >= 0 and pool split sums to B  (conservation)
+  P4  pool share + leased == WS demand (WS always fully covered)
+  P5  the POOL ledger entry holds exactly B at all times
+  P6  PBJ first-fit never overcommits (free >= 0)
+"""
+
+import random
+
+import pytest
+
+from repro.core.jobs import Job
+from repro.core.pbj_manager import PBJManager, PBJPolicyParams
+from repro.core.provision import POOL, FLBNUBProvisionService
+from repro.core.ws_manager import WSManager
+
+
+def _check_invariants(svc):
+    lb_ws = svc.lb_ws
+    B = svc.coordinated_size
+    assert 0 <= svc._pool_ws <= lb_ws, (svc._pool_ws, lb_ws)          # P1
+    assert svc._pool_idle >= 0                                        # P2
+    assert svc._pool_pbj >= 0                                         # P3
+    assert svc._pool_ws + svc._pool_pbj + svc._pool_idle == B
+    leased_ws = svc.cluster.allocated(svc.ws.name)
+    assert svc._pool_ws + leased_ws == svc.ws.demand                  # P4
+    assert svc.cluster.allocated(POOL) == B                           # P5
+    assert svc.pbj.free >= 0                                          # P6
+    assert svc.pbj.running.used() <= svc.pbj.owned
+
+
+def _drive(svc, rng, n_events=200):
+    pending = {}          # jid -> (end_time, epoch)
+    jid = 0
+    t = 0.0
+
+    def pump(starts):
+        for s in starts:
+            pending[s.job.jid] = (s.end_time, s.epoch)
+
+    pump(svc.startup(0.0, ws_initial=rng.randrange(0, 30)))
+    _check_invariants(svc)
+    for _ in range(n_events):
+        t += rng.uniform(1.0, 900.0)
+        kind = rng.choice(("submit", "ws", "tick", "finish"))
+        if kind == "submit":
+            job = Job(jid, t, size=rng.randrange(1, 40),
+                      runtime=rng.uniform(1.0, 5000.0))
+            jid += 1
+            pump(svc.submit(t, job))
+        elif kind == "ws":
+            pump(svc.on_ws_demand(t, rng.randrange(0, 120)))
+        elif kind == "tick":
+            pump(svc.on_lease_tick(t))
+        elif pending:
+            k = min(pending, key=lambda q: pending[q][0])
+            end, epoch = pending.pop(k)
+            t = max(t, end)
+            pump(svc.on_finish(t, k, epoch))
+        _check_invariants(svc)
+    return jid
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_flb_nub_pool_invariants_random_sequences(seed):
+    rng = random.Random(seed)
+    lb_pbj = rng.randrange(1, 30)
+    lb_ws = rng.randrange(1, 30)
+    svc = FLBNUBProvisionService(lb_pbj, lb_ws, PBJManager(), WSManager(),
+                                 lease_seconds=3600.0)
+    n_jobs = _drive(svc, rng)
+    # No lost jobs: every submitted job is queued, running, or completed.
+    pbj = svc.pbj
+    accounted = (len(pbj.queue) + len(pbj.running) + len(pbj.completed))
+    assert accounted == n_jobs
+
+
+@pytest.mark.parametrize("seed", (0, 1, 2))
+def test_flb_nub_release_rule_respects_pool(seed):
+    """U/V/G release (rule 4) must come out of leased nodes first; pool
+    nodes only churn back to the pool — B is held throughout."""
+    rng = random.Random(100 + seed)
+    svc = FLBNUBProvisionService(10, 5, PBJManager(params=PBJPolicyParams(
+        release_threshold=0.9, elastic_factor=0.99)), WSManager(),
+        lease_seconds=3600.0)
+    svc.startup(0.0, ws_initial=0)
+    t = 0.0
+    for _ in range(50):
+        t += 3600.0
+        svc.on_ws_demand(t, rng.randrange(0, 20))
+        svc.on_lease_tick(t)
+        _check_invariants(svc)
+        # Aggressive releasing can never un-hold the rigid lower bound.
+        assert svc.cluster.allocated(POOL) == 15

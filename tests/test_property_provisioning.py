@@ -13,7 +13,10 @@ System invariants that must hold for ANY event sequence:
 
 import math
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.jobs import Job
 from repro.core.pbj_manager import PBJManager, PBJPolicyParams

@@ -1,0 +1,98 @@
+"""Vectorized sweep engine vs the discrete-event engine (§6 methodology).
+
+The acceptance bar for ``repro.sim.sweep``: one ``run_sweep`` call over
+20+ (system, parameter) points, with the vectorized DCS/EC2 fast path
+agreeing with per-point event-engine runs on every point — integer
+metrics (peak nodes, completed jobs, adjust events) exactly, node-hours
+to float64 round-off (< 1e-9 relative; the two paths sum the same
+piecewise-constant integral in different association orders).
+"""
+
+import pytest
+
+from repro.sim import traces
+from repro.sim.engine import run_sim
+from repro.sim.sweep import SweepPoint, _build, paper_grid, run_sweep
+
+# Small trace grid: the first two simulated days of the moment-matched
+# NASA-iPSC + WorldCup pair, including jobs that straddle the horizon.
+T = 2 * 24 * 3600.0
+
+
+@pytest.fixture(scope="module")
+def workload():
+    jobs = [j for j in traces.nasa_ipsc(seed=3) if j.submit < T]
+    ws = [(t, d) for t, d in traces.worldcup98(seed=3, peak_vms=64)
+          if t < T]
+    return jobs, ws
+
+
+@pytest.fixture(scope="module")
+def grid():
+    dcs = [SweepPoint("dcs", prc_pbj=p, prc_ws=w)
+           for p, w in ((128, 64), (96, 32), (64, 64), (128, 128),
+                        (32, 16), (64, 0), (48, 96), (200, 100))]
+    ec2 = [SweepPoint("ec2", lease_seconds=s)
+           for s in (450.0, 900.0, 1800.0, 2700.0, 3600.0, 5400.0,
+                     7200.0, 10800.0, 14400.0, 28800.0)]
+    phoenix = [SweepPoint("fb", capacity=160),
+               SweepPoint("flb_nub", lb_pbj=13, lb_ws=12)]
+    return dcs + ec2 + phoenix          # 20 vectorized + 2 event points
+
+
+def test_vectorized_matches_event_engine_exactly(workload, grid):
+    jobs, ws = workload
+    assert len(grid) >= 20              # one call sweeps the whole grid
+    vec = run_sweep(grid, jobs, ws, T, vectorize=True)
+    ref = run_sweep(grid, jobs, ws, T, vectorize=False)
+    assert [r["system"] for r in vec] == [p.name() for p in grid]
+    for point, v, r in zip(grid, vec, ref):
+        expected_engine = ("vectorized" if point.system in ("dcs", "ec2")
+                           else "event")
+        assert v["engine"] == expected_engine, point
+        assert r["engine"] == "event"
+        # Exact integer agreement.
+        assert v["peak_nodes"] == r["peak_nodes"], point
+        assert v["adjust_events"] == r["adjust_events"], point
+        assert v["pbj_adjust_events"] == r["pbj_adjust_events"], point
+        assert v["kills"] == r["kills"], point
+        if "completed_jobs" in v and "completed_jobs" in r:
+            assert v["completed_jobs"] == r["completed_jobs"], point
+            assert v["avg_turnaround"] == pytest.approx(
+                r["avg_turnaround"], rel=1e-9)
+        # Node-hours to float64 round-off.
+        assert v["node_hours"] == pytest.approx(r["node_hours"], rel=1e-9,
+                                                abs=1e-9), point
+
+
+def test_vectorized_ec2_against_direct_run_sim(workload):
+    """Belt and braces: the fast path also matches a hand-driven
+    ``run_sim`` (not just ``run_sweep``'s own fallback)."""
+    jobs, ws = workload
+    from repro.sim.engine import build_ec2_rightscale, clone_jobs
+    point = SweepPoint("ec2", lease_seconds=1800.0)
+    row = run_sweep([point], jobs, ws, T)[0]
+    r = run_sim(build_ec2_rightscale(1800.0), clone_jobs(jobs), ws, T)
+    assert row["peak_nodes"] == r.peak_nodes
+    assert row["completed_jobs"] == r.completed_jobs
+    assert row["node_hours"] == pytest.approx(r.node_hours, rel=1e-9)
+    assert row["avg_turnaround"] == pytest.approx(r.avg_turnaround, rel=1e-9)
+    # EC2 never queues: turnaround == execution (§6.6.1).
+    assert row["avg_turnaround"] == row["avg_execution"]
+
+
+def test_paper_grid_shape_and_fallback_routing(workload):
+    jobs, ws = workload
+    pts = paper_grid(prc_pbj=64, prc_ws=64,
+                     capacity_fracs=(0.6, 1.0), B_values=(13, 25),
+                     lease_minutes=(30, 60), fig18_B=25)
+    assert len(pts) == 1 + 2 + 2 + 2 * 2
+    rows = run_sweep(pts, jobs, ws, T)
+    by_kind = {r["system_kind"]: r["engine"] for r in rows}
+    assert by_kind["dcs"] == "vectorized"
+    assert by_kind["ec2"] == "vectorized"
+    assert by_kind["fb"] == "event"
+    assert by_kind["flb_nub"] == "event"
+    # Every builder constructs a ProvisioningSystem with the right lease.
+    for p in pts:
+        assert _build(p).lease_seconds == p.lease_seconds

@@ -16,7 +16,7 @@ from repro.core.spec import (CoordinationModel, Granularity, Relationship,
 from repro.core.provision import FBProvisionService
 from repro.core.ws_manager import WSManager
 from repro.sim import traces
-from repro.sim.simulator import build_dcs, clone_jobs, run_sim
+from repro.sim.engine import build_dcs, clone_jobs, run_sim
 
 
 def test_full_consolidation_story():

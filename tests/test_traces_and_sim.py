@@ -4,8 +4,8 @@ import numpy as np
 import pytest
 
 from repro.sim import traces
-from repro.sim.simulator import (build_dcs, build_ec2_rightscale, build_fb,
-                                 build_flb_nub, clone_jobs, run_sim)
+from repro.sim.engine import (build_dcs, build_ec2_rightscale, build_fb,
+                              build_flb_nub, clone_jobs, run_sim)
 
 T = traces.TWO_WEEKS
 
