@@ -4,8 +4,19 @@ One function per paper table/figure (benchmarks/tables.py). For each, we
 print ``name,us_per_call,derived`` CSV (derived = the table's headline
 metric) and dump all rows to results/tables.json. The roofline table
 (deliverable g) is appended from the dry-run artifacts when present.
+
+``python -m benchmarks.run sweep`` instead benchmarks the sweep engine's
+execution paths against each other — per-point event engine vs the
+batched ``mode="scan"`` fast path — on the paper's FB / FLB-NUB grids
+(Figs. 13/14/18) across workload traces, writes
+``results/BENCH_sweep.json`` (wall-clock, points/sec, per-point fidelity
+drift) and, with ``--check-fidelity X``, exits non-zero when any point's
+completed-jobs or node-hours drift exceeds the fraction ``X`` — the CI
+smoke gate. ``--tiny`` shrinks the study to a two-day trace slice for
+fast CI runs.
 """
 
+import argparse
 import json
 import os
 import sys
@@ -52,6 +63,135 @@ def _derived(name, rows):
     return f"rows={len(rows)}"
 
 
+def sweep_benchmark(tiny: bool = False) -> dict:
+    """Event engine vs batched scan on the paper's coordinated-policy
+    grids. Returns the BENCH_sweep.json payload."""
+    from repro.sim import traces
+    from repro.core.profiles import scale_profile
+    from repro.sim.sweep import SweepPoint, run_sweep_workloads
+
+    if tiny:
+        horizon = 2 * 24 * 3600.0
+        jobs = [j for j in traces.nasa_ipsc(seed=0) if j.submit < horizon]
+        ws = [(t, d) for t, d in traces.worldcup98(seed=0, peak_vms=64)
+              if t < horizon]
+        workloads = [(jobs, ws)]
+        points = [SweepPoint("fb", capacity=96, label="FB(C=96)"),
+                  SweepPoint("fb", capacity=128, label="FB(C=128)"),
+                  SweepPoint("flb_nub", lb_pbj=13, lb_ws=12,
+                             label="FLB-NUB(B=25)"),
+                  SweepPoint("flb_nub", lb_pbj=13, lb_ws=12,
+                             lease_seconds=1800.0,
+                             label="FLB-NUB(L=30min)")]
+    else:
+        horizon = traces.TWO_WEEKS
+        ws_nasa = traces.worldcup98(seed=0, peak_vms=128)
+        # The multi-trace axis: both §6.2 batch logs plus a doubled WS
+        # demand variant of the World Cup profile.
+        workloads = [
+            (traces.nasa_ipsc(seed=0), ws_nasa),
+            (traces.sdsc_blue(seed=0), traces.worldcup98(seed=1,
+                                                         peak_vms=128)),
+            (traces.nasa_ipsc(seed=1), scale_profile(ws_nasa, 2.0)),
+        ]
+        dcs_size = 256
+        points = (
+            [SweepPoint("fb", capacity=int(round(dcs_size * f)),
+                        label=f"FB(C={int(round(dcs_size * f))})")
+             for f in (0.5, 0.6, 0.75, 0.9, 1.0)]            # Fig. 13
+            + [SweepPoint("flb_nub", lb_pbj=B - min(12, B - 1),
+                          lb_ws=min(12, B - 1), label=f"FLB-NUB(B={B})")
+               for B in (13, 25, 51, 102, 154)]              # Fig. 14
+            + [SweepPoint("flb_nub", lb_pbj=13, lb_ws=12,
+                          lease_seconds=60.0 * m,
+                          label=f"FLB-NUB(L={m}min)")
+               for m in (15, 30, 60, 120, 240)])             # Fig. 18
+
+    n_evals = len(points) * len(workloads)
+    out = {"grid": [p.name() for p in points],
+           "workloads": len(workloads), "evals": n_evals, "tiny": tiny}
+
+    t0 = time.time()
+    event_rows = run_sweep_workloads(points, workloads, horizon,
+                                     mode="event")
+    event_wall = time.time() - t0
+
+    t0 = time.time()
+    scan_rows = run_sweep_workloads(points, workloads, horizon, mode="scan")
+    compile_wall = time.time() - t0
+    t0 = time.time()
+    scan_rows = run_sweep_workloads(points, workloads, horizon, mode="scan")
+    scan_wall = max(time.time() - t0, 1e-6)
+
+    out["event"] = {"wall_s": round(event_wall, 4),
+                    "points_per_sec": round(n_evals / max(event_wall, 1e-6),
+                                            2)}
+    out["scan"] = {"compile_plus_run_s": round(compile_wall, 4),
+                   "wall_s": round(scan_wall, 4),
+                   "points_per_sec": round(n_evals / scan_wall, 2)}
+    out["speedup"] = round(event_wall / scan_wall, 2)
+    import jax
+    out["backend"] = {"devices": [str(d) for d in jax.devices()],
+                      "cpu_count": os.cpu_count()}
+    out["note"] = ("scan wall-clock is one jitted XLA program over the "
+                   "whole (policy, point, trace) grid; it is compute-bound "
+                   "per lane, so the speedup over the per-point Python "
+                   "event engine scales with the host's SIMD width / core "
+                   "count / accelerator, while the event path is "
+                   "single-core Python either way")
+
+    drift, comparisons = [], []
+    for w in range(len(workloads)):
+        for i, p in enumerate(points):
+            ev, sc = event_rows[w][i], scan_rows[w][i]
+            dj = abs(sc["completed_jobs"] - ev["completed_jobs"]) \
+                / max(1, ev["completed_jobs"])
+            dn = abs(sc["node_hours"] - ev["node_hours"]) \
+                / max(1e-9, ev["node_hours"])
+            dp = abs(sc["peak_nodes"] - ev["peak_nodes"]) \
+                / max(1, ev["peak_nodes"])
+            drift.append(max(dj, dn))
+            comparisons.append({
+                "point": p.name(), "workload": w,
+                "event": {m: ev[m] for m in ("completed_jobs", "node_hours",
+                                             "peak_nodes", "kills")},
+                "scan": {m: sc[m] for m in ("completed_jobs", "node_hours",
+                                            "peak_nodes", "kills",
+                                            "window_overflow")},
+                "drift_completed": round(dj, 4),
+                "drift_node_hours": round(dn, 4),
+                "drift_peak": round(dp, 4)})
+    out["max_drift"] = round(max(drift), 4)
+    out["comparisons"] = comparisons
+    return out
+
+
+def run_sweep_bench(argv) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.run sweep")
+    ap.add_argument("--tiny", action="store_true",
+                    help="two-day trace slice, 4-point grid (CI smoke)")
+    ap.add_argument("--check-fidelity", type=float, default=None,
+                    metavar="FRAC", help="exit 1 if any point's completed-"
+                    "jobs or node-hours drift exceeds FRAC")
+    ap.add_argument("--out", default="results/BENCH_sweep.json")
+    args = ap.parse_args(argv)
+    out = sweep_benchmark(tiny=args.tiny)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"evals={out['evals']} event={out['event']['wall_s']}s "
+          f"({out['event']['points_per_sec']} pts/s) "
+          f"scan={out['scan']['wall_s']}s "
+          f"({out['scan']['points_per_sec']} pts/s) "
+          f"speedup={out['speedup']}x max_drift={out['max_drift']}")
+    print(f"# -> {args.out}")
+    if args.check_fidelity is not None and out["max_drift"] > args.check_fidelity:
+        print(f"FIDELITY DRIFT {out['max_drift']} exceeds "
+              f"{args.check_fidelity}", file=sys.stderr)
+        return 1
+    return 0
+
+
 def main() -> None:
     os.makedirs("results", exist_ok=True)
     all_rows = {}
@@ -78,4 +218,6 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "sweep":
+        sys.exit(run_sweep_bench(sys.argv[2:]))
     main()

@@ -9,6 +9,13 @@ runs as ONE batched XLA program instead of 20 sequential event-driven
 simulations. This is the paper's contribution as a *composable JAX
 module* (DESIGN.md §3).
 
+The sweep engine generalizes this approach: ``repro.sim.scan`` extends
+the tick-simulator idea with a sliding job window, the FB kill path and
+a traced lease axis, and ``repro.sim.sweep`` exposes it as
+``run_sweep(..., mode="scan")`` over full ``SweepPoint`` grids and
+batched workload traces. This module remains the minimal, fixed-lease
+B × U × V × G study (§6.6.4) in its simplest vmappable form.
+
 Approximations vs the event simulator (both documented and measured in
 tests): time is discretized to the lease tick L (job completions round up
 to tick boundaries), and the WS demand is sampled per tick. Fidelity is
@@ -52,14 +59,27 @@ SUBSTEPS = 12    # job dynamics advance at L/12 (300 s at L=1h); policy
 
 def pack_trace(jobs: Sequence[Job], ws_trace: Sequence[Tuple[float, int]],
                duration: float, lease_seconds: float,
-               substeps: int = SUBSTEPS):
-    """Fixed-size arrays: job table + per-substep WS demand."""
+               substeps: int = SUBSTEPS, dtype=None):
+    """Fixed-size arrays: job table + per-substep WS demand.
+
+    ``dtype`` defaults to the active x64 setting — float64 inside the
+    ``enable_x64`` scope the sweep engine (``repro.sim.sweep``) runs its
+    exact paths under, float32 otherwise — so scan-vs-event comparisons
+    are never limited by the packing precision.
+    """
+    if dtype is None:
+        dtype = np.float64 if jax.config.jax_enable_x64 else np.float32
+    elif np.dtype(dtype) == np.float64 and not jax.config.jax_enable_x64:
+        raise ValueError(
+            "dtype=float64 requested with jax x64 disabled — jnp.asarray "
+            "would silently downcast to float32; wrap the call in "
+            "jax.experimental.enable_x64()")
     dt = lease_seconds / substeps
     n_steps = int(np.ceil(duration / dt))
-    submit = np.array([j.submit for j in jobs], np.float32)
-    size = np.array([j.size for j in jobs], np.float32)
-    runtime = np.array([j.runtime for j in jobs], np.float32)
-    ws = per_tick_profile(ws_trace, duration, dt)[:n_steps].astype(np.float32)
+    submit = np.array([j.submit for j in jobs], dtype)
+    size = np.array([j.size for j in jobs], dtype)
+    runtime = np.array([j.runtime for j in jobs], dtype)
+    ws = per_tick_profile(ws_trace, duration, dt)[:n_steps].astype(dtype)
     return (jnp.asarray(submit), jnp.asarray(size), jnp.asarray(runtime),
             jnp.asarray(ws), n_steps)
 
@@ -132,8 +152,8 @@ def simulate(params: FLBNUBParams, submit, size, runtime, ws_demand,
         return state, (alloc, events)
 
     state0 = (lb_pbj, lb_pbj, runtime, jnp.zeros(n_jobs, bool),
-              jnp.zeros(n_jobs, bool), jnp.zeros(n_jobs, jnp.float32))
-    steps = (jnp.arange(n_steps, dtype=jnp.float32), ws_demand)
+              jnp.zeros(n_jobs, bool), jnp.zeros(n_jobs, submit.dtype))
+    steps = (jnp.arange(n_steps, dtype=submit.dtype), ws_demand)
     state, (alloc, events) = jax.lax.scan(step, state0, steps)
     _, _, _, running, done, finish_t = state
     turnaround = jnp.where(done, finish_t - submit, 0.0)

@@ -25,7 +25,16 @@ from repro.core.jobs import Job, JobQueue, RunningSet
 
 @dataclasses.dataclass(frozen=True)
 class PBJPolicyParams:
-    """§5.2 knobs. Baseline values from §6.6.3: U=1.2, V=0.2, G=0.5."""
+    """§5.2 knobs. Baseline values from §6.6.3: U=1.2, V=0.2, G=0.5.
+
+    A jax pytree (U/V/G are data leaves, the preemption mode is static
+    metadata) so policy parameters flow directly into the jitted sweep
+    paths — ``repro.sim.scan`` builds its vmapped U/V/G grids from these
+    fields, and a batch of params can itself be ``tree_map``-ed or
+    stacked for parameter studies. The registration lives in
+    ``repro.sim.scan`` (the jax-side consumer): this module stays
+    importable with numpy alone, like the rest of the event engine.
+    """
 
     request_threshold: float = 1.2     # U — threshold ratio of requesting
     release_threshold: float = 0.2     # V — threshold ratio of releasing

@@ -23,7 +23,8 @@ from typing import List, Sequence, Tuple
 import numpy as np
 
 __all__ = ["step_points", "step_integral", "sample_steps",
-           "per_tick_profile", "job_demand_profile", "windowed_mean"]
+           "per_tick_profile", "job_demand_profile", "scale_profile",
+           "windowed_mean"]
 
 
 def step_points(trace: Sequence[Tuple[float, float]], duration: float
@@ -87,6 +88,21 @@ def job_demand_profile(submits: np.ndarray, sizes: np.ndarray,
     return np.bincount(np.minimum(idx, n - 1),
                        weights=np.asarray(sizes, np.float64)[keep],
                        minlength=n)
+
+
+def scale_profile(trace: Sequence[Tuple[float, float]], factor: float
+                  ) -> List[Tuple[float, int]]:
+    """Scale a WS demand trace's values by ``factor`` (times unchanged).
+
+    The multi-trace sweep studies (``run_sweep_workloads``) batch the
+    same parameter grid over demand variants — e.g. the §6.2 World Cup
+    profile at 0.5× / 2× its recorded intensity — and this is the
+    canonical way to derive them: values round to whole VMs and never go
+    negative, so a scaled trace is still a valid demand profile.
+    """
+    if factor < 0:
+        raise ValueError(f"factor must be >= 0, got {factor}")
+    return [(t, max(0, int(round(v * factor)))) for t, v in trace]
 
 
 def windowed_mean(samples: Sequence[Tuple[float, float]], t: float,

@@ -5,12 +5,13 @@ from repro.sim.traces import (TraceSpec, nasa_ipsc, scale_jobs, sdsc_blue,
 
 __all__ = [
     "SimResult", "run_sim", "clone_jobs", "build_dcs", "build_fb",
-    "build_flb_nub", "build_ec2_rightscale", "SweepPoint", "run_sweep",
-    "paper_grid", "TraceSpec", "nasa_ipsc", "sdsc_blue", "worldcup98",
-    "scale_jobs",
+    "build_flb_nub", "build_ec2_rightscale", "SweepPoint", "ScanOptions",
+    "run_sweep", "run_sweep_workloads", "paper_grid", "TraceSpec",
+    "nasa_ipsc", "sdsc_blue", "worldcup98", "scale_jobs",
 ]
 
-_SWEEP_NAMES = ("SweepPoint", "run_sweep", "paper_grid")
+_SWEEP_NAMES = ("SweepPoint", "ScanOptions", "run_sweep",
+                "run_sweep_workloads", "paper_grid")
 
 
 def __getattr__(name):

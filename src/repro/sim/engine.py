@@ -17,8 +17,11 @@ The four paper systems (§6.3, §6.5, §6.6) are constructed by the
   * EC2+RightScale     — §6.6.1 (``core.baselines.EC2RightScaleSystem``)
 
 Parameter *sweeps* over grids of systems live in ``repro.sim.sweep``,
-which batches the stateless systems as vectorized JAX programs and falls
-back to this engine for the stateful PhoenixCloud policies.
+which batches the stateless systems as exact vectorized JAX programs,
+offers a batched ``lax.scan`` fast path (``repro.sim.scan``) for the
+stateful PhoenixCloud policies, and uses this engine as the per-point
+reference path (``mode="event"``) that every fast path is
+cross-validated against.
 """
 
 from __future__ import annotations
@@ -38,6 +41,11 @@ from repro.core.ws_manager import WSManager
 # Event kinds (ordering key breaks simultaneity deterministically:
 # ws-demand changes apply before lease ticks, ticks before submits).
 _WS, _TICK, _SUBMIT, _FINISH = 0, 1, 2, 3
+
+# The paper's comparison matrix (§6.3, §6.5, §6.6) — the single source of
+# truth for valid system names, shared with the sweep engine's
+# ``SweepPoint`` validation.
+SYSTEMS = ("dcs", "fb", "flb_nub", "ec2")
 
 
 @dataclasses.dataclass

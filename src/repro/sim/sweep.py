@@ -4,30 +4,43 @@ The headline results of the paper are *sweeps*: Fig. 13 sweeps the
 private-cloud capacity C to find the ~40 % configuration-size reduction,
 Fig. 14 sweeps the coordinated-pool size B, and Fig. 18 sweeps the lease
 time unit L against EC2+RightScale. ``run_sweep`` evaluates a whole grid
-of :class:`SweepPoint`s — mixing all four systems — in one call.
+of :class:`SweepPoint`s — mixing all four systems — in one call, and
+``run_sweep_workloads`` adds a second batch axis over workload traces.
 
-Two execution paths:
+Three execution paths, selected by ``mode``:
 
-  * **Vectorized fast path** (DCS and EC2+RightScale). Both baselines
-    are *stateless* given the trace — DCS is a static partition (its
-    cost/peak curve is closed-form arithmetic over the grid) and the
-    EC2 allocation curve is a pure function of (submit, runtime, L)
-    evaluated for ALL sweep points at once as batched ``jnp`` array
-    ops (``jax.vmap``): the trace's WS demand change points are
-    extracted and integrated once (``core.profiles``), job release
-    ticks for every lease value are a broadcasted rounding to lease
-    boundaries, node-hours is the WS integral plus each job's
-    size·(release − submit) span, and peak consumption is a
-    cumulative-max over the merged, time-sorted event deltas.
-    The arithmetic runs in float64 (``jax.experimental.enable_x64``) so
-    results agree with the event engine to round-off — node-hours match
-    to < 1e-9 relative and every integer metric (peak nodes, completed
-    jobs, adjust events) matches exactly (tests/test_sweep.py).
+  * **Vectorized fast path** (DCS and EC2+RightScale; modes ``"auto"``
+    and ``"scan"``). Both baselines are *stateless* given the trace —
+    DCS is a static partition (its cost/peak curve is closed-form
+    arithmetic over the grid) and the EC2 allocation curve is a pure
+    function of (submit, runtime, L) evaluated for ALL sweep points at
+    once as batched ``jnp`` array ops (``jax.vmap``): the trace's WS
+    demand change points are extracted and integrated once
+    (``core.profiles``), job release ticks for every lease value are a
+    broadcasted rounding to lease boundaries, node-hours is the WS
+    integral plus each job's size·(release − submit) span, and peak
+    consumption is a cumulative-max over the merged, time-sorted event
+    deltas. The arithmetic runs in float64
+    (``jax.experimental.enable_x64``) so results agree with the event
+    engine to round-off — node-hours match to < 1e-9 relative and every
+    integer metric (peak nodes, completed jobs, adjust events) matches
+    exactly (tests/test_sweep.py).
 
-  * **Event-engine fallback** (PhoenixCloud FB and FLB-NUB). The two
-    coordinated policies are stateful — kills, queue contents and U/V/G
-    adjustments feed back into the allocation — so each point runs
-    through ``repro.sim.engine.run_sim`` on its own clone of the trace.
+  * **Batched scan fast path** (PhoenixCloud FB and FLB-NUB; mode
+    ``"scan"``). The two coordinated policies are stateful — kills,
+    queue contents and U/V/G adjustments feed back into the allocation —
+    so they cannot be closed-form; ``repro.sim.scan`` re-expresses both
+    as a single jitted ``lax.scan`` over a fixed-size job window with
+    status lanes, ``vmap``-ed over sweep points AND packed workload
+    traces. Approximate by discretization: completed jobs within 2 %,
+    node-hours and peak within 15 % of the event engine, parameter-sweep
+    orderings (J1/J2 trends) identical (tests/test_sweep.py,
+    tests/test_scan_policies.py).
+
+  * **Event-engine path** (mode ``"event"``, and the FB / FLB-NUB
+    fallback in mode ``"auto"``). Each point runs through
+    ``repro.sim.engine.run_sim`` on its own clone of the trace — the
+    per-point reference every fast path is validated against.
 
 The vectorized path replicates the event engine's semantics exactly,
 including its tie-breaking: at a shared timestamp, WS demand changes
@@ -49,11 +62,20 @@ from jax.experimental import enable_x64
 from repro.core.jobs import Job
 from repro.core.pbj_manager import PBJPolicyParams
 from repro.core.profiles import step_integral, step_points
-from repro.sim.engine import (_SUBMIT, _TICK, _WS, build_dcs,
+from repro.sim import scan as scanlib
+from repro.sim.engine import (_SUBMIT, _TICK, _WS, SYSTEMS, build_dcs,
                               build_ec2_rightscale, build_fb, build_flb_nub,
                               clone_jobs, default_duration, run_sim)
 
-__all__ = ["SweepPoint", "run_sweep", "paper_grid"]
+__all__ = ["SweepPoint", "ScanOptions", "run_sweep", "run_sweep_workloads",
+           "paper_grid"]
+
+MODES = ("auto", "event", "scan")
+
+# Systems with a stateless closed-form fast path vs the stateful
+# coordinated policies that take the lax.scan path in mode="scan".
+_VECTORIZED = ("dcs", "ec2")
+_SCANNABLE = ("fb", "flb_nub")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +98,15 @@ class SweepPoint:
     params: PBJPolicyParams = PBJPolicyParams()
     label: str = ""
 
+    def __post_init__(self):
+        if self.system not in SYSTEMS:
+            raise ValueError(
+                f"unknown system {self.system!r}; expected one of "
+                f"{sorted(SYSTEMS)}")
+        if self.lease_seconds <= 0:
+            raise ValueError(
+                f"lease_seconds must be > 0, got {self.lease_seconds}")
+
     def name(self) -> str:
         if self.label:
             return self.label
@@ -85,6 +116,37 @@ class SweepPoint:
             "flb_nub": f"FLB-NUB(B={self.lb_pbj + self.lb_ws})",
             "ec2": f"EC2+RightScale(L={self.lease_seconds:g}s)",
         }[self.system]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanOptions:
+    """Tuning knobs of the ``mode="scan"`` fast path (see
+    ``repro.sim.scan``). The defaults are the settings the fidelity
+    contract is validated at; ``dt=None`` picks each policy's validated
+    substep (``scanlib.pick_dt`` — FB coarse, FLB-NUB fine), capped by
+    the grid's shortest lease."""
+
+    dt: Optional[float] = None
+    window: Optional[int] = None
+    chunk_len: Optional[int] = None
+    ff_passes: int = scanlib.DEFAULT_FF_PASSES
+    dtype: Optional[np.dtype] = None
+
+    def resolve(self, policy: str, leases: Sequence[float],
+                duration: float) -> scanlib.ScanSpec:
+        dt = self.dt if self.dt is not None else scanlib.pick_dt(policy,
+                                                                 leases)
+        window = (self.window if self.window is not None else
+                  (scanlib.FB_WINDOW if policy == "fb"
+                   else scanlib.FLB_WINDOW))
+        # Re-gather cadence: FB's window turns over slowly (its backlog
+        # is bounded by C), FLB-NUB's buffers arrival bursts.
+        chunk_seconds = 3600.0 if policy == "fb" else 1800.0
+        chunk = (self.chunk_len if self.chunk_len is not None
+                 else max(2, int(round(chunk_seconds / dt))))
+        return scanlib.ScanSpec(
+            n_steps=int(np.ceil(duration / dt)), dt=dt, window=window,
+            chunk_len=chunk, ff_passes=self.ff_passes)
 
 
 def _build(p: SweepPoint):
@@ -107,7 +169,7 @@ def _sweep_dcs(points: List[SweepPoint], duration: float) -> List[Dict]:
 
     Vectorized DCS rows carry the cost/peak metrics only — job metrics
     (completed jobs, turnaround) depend on the first-fit queue dynamics
-    and need the event engine (``run_sweep(..., vectorize=False)``).
+    and need the event engine (``run_sweep(..., mode="event")``).
     """
     rows = []
     for p in points:
@@ -209,50 +271,193 @@ def _sweep_ec2(points: List[SweepPoint], jobs: Sequence[Job],
     return rows
 
 
+# ------------------------------------------------------- batched scan path
+
+def _sweep_scan(points: List[SweepPoint],
+                workloads: Sequence[Tuple[Sequence[Job],
+                                          Sequence[Tuple[float, int]]]],
+                duration: float,
+                options: ScanOptions) -> List[List[Dict]]:
+    """FB and FLB-NUB points through the batched ``lax.scan`` fast path.
+
+    Returns one row list per workload, each aligned with ``points``
+    (which must all be scan-eligible systems). The whole
+    (policy, point, workload) grid is one jitted XLA program.
+    """
+    assert all(p.system in _SCANNABLE for p in points)
+    for p in points:
+        # The scan kill encoding resets a killed lane to its full runtime
+        # (repro.sim.scan); the beyond-paper checkpoint-preempt mode only
+        # exists on the event engine — fail loudly rather than silently
+        # report full-restart metrics for a preemption study.
+        if p.system == "fb" and p.params.checkpoint_preempt:
+            raise ValueError(
+                f"{p.name()}: checkpoint_preempt is not supported by "
+                f"mode=\"scan\"; run this point with mode=\"auto\" or "
+                f"mode=\"event\"")
+    fb_idx = [i for i, p in enumerate(points) if p.system == "fb"]
+    flb_idx = [i for i, p in enumerate(points) if p.system == "flb_nub"]
+
+    fb = flb = fb_packed = flb_packed = fb_spec = flb_spec = None
+    if fb_idx:
+        fb_spec = options.resolve(
+            "fb", [points[i].lease_seconds for i in fb_idx], duration)
+        fb_packed, _ = scanlib.pack_workloads(
+            workloads, duration, fb_spec.dt, window=fb_spec.window,
+            chunk_len=fb_spec.chunk_len, dtype=options.dtype)
+        f = fb_packed.ws.dtype
+        fb = scanlib.FBGrid(
+            capacity=jnp.asarray([float(points[i].capacity)
+                                  for i in fb_idx], f),
+            lease=jnp.asarray([points[i].lease_seconds for i in fb_idx], f))
+    if flb_idx:
+        flb_spec = options.resolve(
+            "flb_nub", [points[i].lease_seconds for i in flb_idx], duration)
+        flb_packed, _ = scanlib.pack_workloads(
+            workloads, duration, flb_spec.dt, window=flb_spec.window,
+            chunk_len=flb_spec.chunk_len, dtype=options.dtype)
+        f = flb_packed.ws.dtype
+        flb = scanlib.FLBGrid(
+            B=jnp.asarray([float(points[i].lb_pbj + points[i].lb_ws)
+                           for i in flb_idx], f),
+            lb_ws=jnp.asarray([float(points[i].lb_ws) for i in flb_idx], f),
+            U=jnp.asarray([points[i].params.request_threshold
+                           for i in flb_idx], f),
+            V=jnp.asarray([points[i].params.release_threshold
+                           for i in flb_idx], f),
+            G=jnp.asarray([points[i].params.elastic_factor
+                           for i in flb_idx], f),
+            lease=jnp.asarray([points[i].lease_seconds for i in flb_idx], f))
+
+    out = scanlib.scan_grids(fb, flb, fb_packed, flb_packed,
+                             fb_spec=fb_spec, flb_spec=flb_spec)
+    out = jax.tree_util.tree_map(np.asarray, out)
+
+    per_workload: List[List[Dict]] = []
+    for w in range(len(workloads)):
+        rows: List[Optional[Dict]] = [None] * len(points)
+        for kind, idxs in (("fb", fb_idx), ("flb_nub", flb_idx)):
+            for j, i in enumerate(idxs):
+                m = {k: v[w][j] for k, v in out[kind].items()}
+                p = points[i]
+                rows[i] = {
+                    "system": p.name(), "system_kind": p.system,
+                    "engine": "scan", "lease_seconds": p.lease_seconds,
+                    "completed_jobs": int(round(float(m["completed_jobs"]))),
+                    "avg_turnaround": float(m["avg_turnaround"]),
+                    "avg_execution": float(m["avg_execution"]),
+                    "node_hours": float(m["node_hours"]),
+                    "peak_nodes": int(round(float(m["peak_nodes"]))),
+                    "adjust_events": int(round(float(m["adjust_events"]))),
+                    "pbj_adjust_events": int(round(float(
+                        m["pbj_adjust_events"]))),
+                    "kills": int(round(float(m["kills"]))),
+                    "window_overflow": int(round(float(
+                        m["window_overflow"]))),
+                }
+        per_workload.append(rows)                 # type: ignore[arg-type]
+    return per_workload                           # type: ignore[return-value]
+
+
 # --------------------------------------------------------------- the sweep
+
+def _resolve_mode(mode: Optional[str], vectorize: bool) -> str:
+    if mode is None:
+        return "auto" if vectorize else "event"
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+    return mode
+
 
 def run_sweep(points: Sequence[SweepPoint], jobs: Sequence[Job],
               ws_trace: Sequence[Tuple[float, int]],
               duration: Optional[float] = None,
-              vectorize: bool = True) -> List[Dict]:
+              vectorize: bool = True,
+              mode: Optional[str] = None,
+              scan_options: ScanOptions = ScanOptions()) -> List[Dict]:
     """Evaluate every sweep point on the same (jobs, ws_trace) workload.
 
     Returns one row dict per point, in input order, each tagged with
-    ``engine`` = ``"vectorized"`` (batched jnp fast path) or
-    ``"event"`` (per-point discrete-event run). Event rows carry the
-    full ``SimResult`` metric set; vectorized DCS rows carry cost/peak
-    metrics only (use ``.get`` or ``vectorize=False`` when job metrics
-    are needed for a DCS point). With ``vectorize=False`` every point
-    runs through the event engine — the cross-validation mode used by
-    tests/test_sweep.py.
-    """
-    if duration is None:
-        duration = default_duration(jobs, ws_trace)
-    rows: List[Optional[Dict]] = [None] * len(points)
+    ``engine`` = ``"vectorized"`` (exact batched jnp fast path),
+    ``"scan"`` (batched lax.scan fast path for FB / FLB-NUB, mode
+    ``"scan"`` only) or ``"event"`` (per-point discrete-event run).
 
-    if vectorize:
+    ``mode`` selects the execution paths (see module docstring):
+    ``"auto"`` (default) vectorizes DCS/EC2 and runs FB / FLB-NUB on the
+    event engine; ``"scan"`` additionally batches FB / FLB-NUB through
+    ``repro.sim.scan``; ``"event"`` runs everything on the event engine —
+    the cross-validation reference used by tests/test_sweep.py. The
+    legacy ``vectorize=False`` flag is equivalent to ``mode="event"``.
+
+    Vectorized DCS rows carry cost/peak metrics only (use ``.get`` or
+    ``mode="event"`` when job metrics are needed for a DCS point); scan
+    rows carry the full metric set but job metrics are approximations
+    within the documented tolerances.
+    """
+    return run_sweep_workloads(points, [(jobs, ws_trace)], duration,
+                               vectorize=vectorize, mode=mode,
+                               scan_options=scan_options)[0]
+
+
+def run_sweep_workloads(points: Sequence[SweepPoint],
+                        workloads: Sequence[Tuple[Sequence[Job],
+                                                  Sequence[Tuple[float, int]]]],
+                        duration: Optional[float] = None,
+                        vectorize: bool = True,
+                        mode: Optional[str] = None,
+                        scan_options: ScanOptions = ScanOptions()
+                        ) -> List[List[Dict]]:
+    """Evaluate a sweep grid over SEVERAL workload traces at once.
+
+    Returns ``rows[w][i]`` — one row list per workload, aligned with
+    ``points``. In ``mode="scan"`` the FB / FLB-NUB points of ALL
+    workloads batch through a single jitted scan (the trace axis is a
+    second ``vmap`` axis); DCS / EC2 points run the exact vectorized
+    path per workload, and the event fallback runs per (point, workload)
+    pair. All workloads share one measurement horizon ``duration``
+    (§6.1) — the default is the latest horizon any workload implies.
+    """
+    mode = _resolve_mode(mode, vectorize)
+    if duration is None:
+        duration = max(default_duration(jobs, ws) for jobs, ws in workloads)
+    rows: List[List[Optional[Dict]]] = [
+        [None] * len(points) for _ in workloads]
+
+    if mode in ("auto", "scan"):
         dcs_idx = [i for i, p in enumerate(points) if p.system == "dcs"]
         ec2_idx = [i for i, p in enumerate(points) if p.system == "ec2"]
-        if dcs_idx:
-            for i, row in zip(dcs_idx,
-                              _sweep_dcs([points[i] for i in dcs_idx],
-                                         duration)):
-                rows[i] = row
-        if ec2_idx:
-            for i, row in zip(ec2_idx,
-                              _sweep_ec2([points[i] for i in ec2_idx],
-                                         jobs, ws_trace, duration)):
-                rows[i] = row
+        for w, (jobs, ws_trace) in enumerate(workloads):
+            if dcs_idx:
+                for i, row in zip(dcs_idx,
+                                  _sweep_dcs([points[i] for i in dcs_idx],
+                                             duration)):
+                    rows[w][i] = row
+            if ec2_idx:
+                for i, row in zip(ec2_idx,
+                                  _sweep_ec2([points[i] for i in ec2_idx],
+                                             jobs, ws_trace, duration)):
+                    rows[w][i] = row
 
-    for i, p in enumerate(points):
-        if rows[i] is not None:
-            continue
-        r = run_sim(_build(p), clone_jobs(jobs), ws_trace, duration,
-                    name=p.name())
-        row = r.row()
-        row.update(system_kind=p.system, engine="event",
-                   lease_seconds=p.lease_seconds)
-        rows[i] = row
+    if mode == "scan":
+        scan_idx = [i for i, p in enumerate(points)
+                    if p.system in _SCANNABLE]
+        if scan_idx:
+            scan_rows = _sweep_scan([points[i] for i in scan_idx],
+                                    workloads, duration, scan_options)
+            for w in range(len(workloads)):
+                for j, i in enumerate(scan_idx):
+                    rows[w][i] = scan_rows[w][j]
+
+    for w, (jobs, ws_trace) in enumerate(workloads):
+        for i, p in enumerate(points):
+            if rows[w][i] is not None:
+                continue
+            r = run_sim(_build(p), clone_jobs(jobs), ws_trace, duration,
+                        name=p.name())
+            row = r.row()
+            row.update(system_kind=p.system, engine="event",
+                       lease_seconds=p.lease_seconds)
+            rows[w][i] = row
     return rows                                   # type: ignore[return-value]
 
 

@@ -26,6 +26,29 @@ def test_fidelity_vs_event_sim(setup):
     assert abs(out["peak_nodes"] - ref.peak_nodes) / ref.peak_nodes < 0.15
 
 
+def test_pack_trace_dtype_follows_x64_setting(setup):
+    """pack_trace defaults to the active x64 mode (the setting the sweep
+    engine's exact paths run under), and takes an explicit dtype."""
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.experimental import enable_x64
+
+    jobs, ws = setup
+    packed = jaxsim.pack_trace(jobs[:8], ws[:8], 7200.0, 3600.0)
+    assert packed[0].dtype == jnp.float32
+    with enable_x64():
+        packed64 = jaxsim.pack_trace(jobs[:8], ws[:8], 7200.0, 3600.0)
+        assert packed64[0].dtype == jnp.float64
+        assert packed64[3].dtype == jnp.float64
+        forced = jaxsim.pack_trace(jobs[:8], ws[:8], 7200.0, 3600.0,
+                                   dtype=np.float32)
+        assert forced[0].dtype == jnp.float32
+    # Explicit float64 without x64 would be silently downcast — refuse.
+    with pytest.raises(ValueError, match="x64"):
+        jaxsim.pack_trace(jobs[:8], ws[:8], 7200.0, 3600.0,
+                          dtype=np.float64)
+
+
 def test_vmapped_paper_trends(setup):
     """J1 (Fig 14): consumption grows and turnaround falls with B;
     §6.6.4: turnaround grows with G — in one batched program."""

@@ -1,0 +1,126 @@
+"""FB kill semantics and accounting invariants of the batched scan path.
+
+The scan encoding (repro.sim.scan) replaces the event engine's Python
+queue/kill machinery with status lanes over a fixed job window: a kill
+is a masked flag flip and the killed lane *derives* back into the queue.
+These tests pin that encoding down, in the spirit of
+tests/test_pool_accounting.py:
+
+  * a designed §5.1 demand-spike scenario where completion is only
+    possible if killed jobs re-enter the queue and restart;
+  * randomized (jobs, WS) workloads cross-checked against the event
+    engine — kill activity, completed jobs and node-hours must agree;
+  * capacity / pool invariants readable from the scan's metrics: an FB
+    site never allocates beyond C, an FLB-NUB site never drops the
+    rigid pool B (§5.2 — it is paid for whether idle or not).
+"""
+
+import random
+
+import pytest
+
+from repro.core.jobs import Job
+from repro.sim.engine import build_fb, build_flb_nub, clone_jobs, run_sim
+from repro.sim.sweep import ScanOptions, SweepPoint, run_sweep
+
+DAY = 24 * 3600.0
+OPTS = ScanOptions(window=32)   # tiny window: these workloads are small
+
+
+def scan_row(point, jobs, ws, duration):
+    return run_sweep([point], jobs, ws, duration, mode="scan",
+                     scan_options=OPTS)[0]
+
+
+# ------------------------------------------------------ designed kill spike
+
+def spike_workload():
+    """C=10: three jobs fill the site, then a WS spike to 8 leaves a
+    budget of 2 nodes — both size-4 jobs MUST be killed (§5.1 rule 2)
+    and can only finish by re-entering the queue and restarting after
+    the demand recedes and the lease tick re-provisions the idle pool."""
+    jobs = [Job(0, 0.0, size=4, runtime=2 * 3600.0),
+            Job(1, 0.0, size=4, runtime=2 * 3600.0),
+            Job(2, 0.0, size=2, runtime=1200.0)]
+    ws = [(0.0, 0), (1800.0, 8), (2 * 3600.0, 0)]
+    return jobs, ws
+
+
+def test_fb_scan_killed_jobs_reenter_and_finish():
+    jobs, ws = spike_workload()
+    point = SweepPoint("fb", capacity=10)
+    row = scan_row(point, jobs, ws, 8 * 3600.0)
+    ref = run_sim(build_fb(10), clone_jobs(jobs), ws, 8 * 3600.0)
+    assert ref.kills == 2                       # the scenario really kills
+    assert row["kills"] == ref.kills
+    # Re-entry: all three jobs complete in BOTH engines — impossible for
+    # the killed pair unless they re-queued and restarted.
+    assert ref.completed_jobs == 3
+    assert row["completed_jobs"] == 3
+    assert row["peak_nodes"] == ref.peak_nodes == 10
+    assert row["node_hours"] == pytest.approx(ref.node_hours, rel=0.05)
+    assert row["window_overflow"] == 0
+
+
+def test_fb_scan_partial_kill_prefers_fewest_nodes():
+    """A smaller spike (demand 5, free 2 after the small job finished)
+    needs only 3 more nodes — exactly one of the size-4 jobs dies, in
+    both engines."""
+    jobs, ws = spike_workload()
+    ws = [(0.0, 0), (1800.0, 5), (2 * 3600.0, 0)]
+    row = scan_row(SweepPoint("fb", capacity=10), jobs, ws, 8 * 3600.0)
+    ref = run_sim(build_fb(10), clone_jobs(jobs), ws, 8 * 3600.0)
+    assert ref.kills == 1
+    assert row["kills"] == 1
+    assert row["completed_jobs"] == ref.completed_jobs == 3
+
+
+# ------------------------------------------------- randomized cross-checks
+
+def random_workload(seed):
+    rng = random.Random(seed)
+    jobs = [Job(i, rng.uniform(0.0, 12 * 3600.0),
+                size=2 ** rng.randrange(0, 4),
+                runtime=rng.uniform(900.0, 2 * 3600.0))
+            for i in range(30)]
+    # WS change points on a 900 s grid (>= the scan substep, so both
+    # engines see the same demand signal).
+    ws = [(k * 900.0, rng.randrange(0, 13)) for k in range(0, 96, 2)]
+    return jobs, ws
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fb_scan_matches_event_on_random_traces(seed):
+    jobs, ws = random_workload(seed)
+    C = 12
+    row = scan_row(SweepPoint("fb", capacity=C), jobs, ws, DAY)
+    ref = run_sim(build_fb(C), clone_jobs(jobs), ws, DAY)
+    assert row["window_overflow"] == 0
+    # Kill activity agrees (node-weighted timing differences allowed).
+    assert (row["kills"] > 0) == (ref.kills > 0)
+    assert abs(row["kills"] - ref.kills) <= max(2, 0.5 * ref.kills)
+    # Jobs are conserved: killed jobs re-enter, nothing is lost.
+    assert abs(row["completed_jobs"] - ref.completed_jobs) <= 2
+    assert row["node_hours"] == pytest.approx(ref.node_hours, rel=0.15)
+    # Capacity invariant: an FB site can never allocate beyond C (§5.1).
+    assert row["peak_nodes"] <= C
+    assert row["node_hours"] <= C * DAY / 3600.0 + 1e-6
+
+
+@pytest.mark.parametrize("seed", (0, 1, 2))
+def test_flb_scan_pool_invariants_on_random_traces(seed):
+    jobs, ws = random_workload(100 + seed)
+    lb_pbj, lb_ws = 13, 12
+    B = lb_pbj + lb_ws
+    row = scan_row(SweepPoint("flb_nub", lb_pbj=lb_pbj, lb_ws=lb_ws),
+                   jobs, ws, DAY)
+    ref = run_sim(build_flb_nub(lb_pbj, lb_ws), clone_jobs(jobs), ws, DAY)
+    assert row["window_overflow"] == 0
+    assert row["kills"] == 0                    # FLB-NUB never kills (§5.2)
+    assert abs(row["completed_jobs"] - ref.completed_jobs) <= 2
+    assert row["node_hours"] == pytest.approx(ref.node_hours, rel=0.15)
+    # Pool invariants (the scan analog of test_pool_accounting P5): the
+    # rigid pool B is held for the whole trace, so consumption is at
+    # least B node-hours per hour and the peak is at least B.
+    assert row["node_hours"] >= B * DAY / 3600.0 - 1e-6
+    assert B <= row["peak_nodes"]

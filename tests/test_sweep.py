@@ -12,7 +12,8 @@ import pytest
 
 from repro.sim import traces
 from repro.sim.engine import run_sim
-from repro.sim.sweep import SweepPoint, _build, paper_grid, run_sweep
+from repro.sim.sweep import (SweepPoint, _build, paper_grid, run_sweep,
+                             run_sweep_workloads)
 
 # Small trace grid: the first two simulated days of the moment-matched
 # NASA-iPSC + WorldCup pair, including jobs that straddle the horizon.
@@ -96,3 +97,111 @@ def test_paper_grid_shape_and_fallback_routing(workload):
     # Every builder constructs a ProvisioningSystem with the right lease.
     for p in pts:
         assert _build(p).lease_seconds == p.lease_seconds
+
+
+# ----------------------------------------------------- mode="scan" fast path
+
+def test_sweep_point_rejects_unknown_system():
+    with pytest.raises(ValueError, match="unknown system"):
+        SweepPoint("ec3")
+    with pytest.raises(ValueError, match="lease_seconds"):
+        SweepPoint("fb", capacity=10, lease_seconds=0.0)
+    with pytest.raises(ValueError, match="unknown mode"):
+        run_sweep([SweepPoint("dcs", prc_pbj=1)], [], [(0.0, 0)], 10.0,
+                  mode="warp")
+    # The scan kill encoding always restarts from scratch — the beyond-
+    # paper checkpoint-preempt mode must be rejected, not silently run.
+    from repro.core.pbj_manager import PBJPolicyParams
+    ckpt = SweepPoint("fb", capacity=8,
+                      params=PBJPolicyParams(checkpoint_preempt=True))
+    with pytest.raises(ValueError, match="checkpoint_preempt"):
+        run_sweep([ckpt], [], [(0.0, 0)], 7200.0, mode="scan")
+
+
+@pytest.fixture(scope="module")
+def full_workload():
+    return traces.nasa_ipsc(seed=0), traces.worldcup98(seed=0, peak_vms=128)
+
+
+@pytest.fixture(scope="module")
+def scan_grid():
+    """Fig. 13 capacities + Fig. 14 pool sizes + Fig. 18 leases — the
+    coordinated-policy points of the paper grids."""
+    return (
+        [SweepPoint("fb", capacity=c) for c in (128, 154, 192, 256)]
+        + [SweepPoint("flb_nub", lb_pbj=B - 12, lb_ws=12)
+           for B in (13, 25, 51, 154)]
+        + [SweepPoint("flb_nub", lb_pbj=13, lb_ws=12, lease_seconds=L,
+                      label=f"FLB-NUB(L={L:g}s)")
+           for L in (900.0, 3600.0, 14400.0)])
+
+
+def test_scan_mode_fidelity_contract(full_workload, scan_grid):
+    """The documented tolerances of the batched lax.scan path vs the
+    event engine on two-week paper workloads: completed jobs within 2 %,
+    node-hours and peak within 15 %, kill counts the same order."""
+    jobs, ws = full_workload
+    T_full = traces.TWO_WEEKS
+    scan_rows = run_sweep(scan_grid, jobs, ws, T_full, mode="scan")
+    event_rows = run_sweep(scan_grid, jobs, ws, T_full, mode="event")
+    for p, s, e in zip(scan_grid, scan_rows, event_rows):
+        assert s["engine"] == "scan" and e["engine"] == "event"
+        assert s["window_overflow"] == 0, p
+        assert abs(s["completed_jobs"] - e["completed_jobs"]) \
+            <= max(2, 0.02 * e["completed_jobs"]), p
+        assert s["node_hours"] == pytest.approx(e["node_hours"], rel=0.15), p
+        assert s["peak_nodes"] == pytest.approx(e["peak_nodes"], rel=0.15), p
+
+
+def test_scan_mode_preserves_sweep_orderings(full_workload, scan_grid):
+    """J1/J2 acceptance: the scan path ranks parameter-sweep points the
+    same way the event engine does (Fig. 13 capacity → cost, Fig. 14
+    B → cost and turnaround, Fig. 18 L → adjust events)."""
+    jobs, ws = full_workload
+    T_full = traces.TWO_WEEKS
+    scan_rows = run_sweep(scan_grid, jobs, ws, T_full, mode="scan")
+    event_rows = run_sweep(scan_grid, jobs, ws, T_full, mode="event")
+
+    def order(rows, idx, metric):
+        vals = [rows[i][metric] for i in idx]
+        return sorted(range(len(vals)), key=vals.__getitem__)
+
+    fb_idx, b_idx, l_idx = range(0, 4), range(4, 8), range(8, 11)
+    # Fig. 13: node-hours grow with capacity C.
+    assert order(scan_rows, fb_idx, "node_hours") \
+        == order(event_rows, fb_idx, "node_hours") == [0, 1, 2, 3]
+    # J1 (Fig. 14): consumption grows with B, turnaround falls with B.
+    assert order(scan_rows, b_idx, "node_hours") \
+        == order(event_rows, b_idx, "node_hours") == [0, 1, 2, 3]
+    assert scan_rows[4]["avg_turnaround"] > scan_rows[7]["avg_turnaround"]
+    assert event_rows[4]["avg_turnaround"] > event_rows[7]["avg_turnaround"]
+    # Fig. 18: PBJ adjust events fall as the lease unit grows.
+    assert order(scan_rows, l_idx, "pbj_adjust_events") \
+        == order(event_rows, l_idx, "pbj_adjust_events") == [2, 1, 0]
+
+
+def test_scan_mode_batches_the_trace_axis(workload):
+    """run_sweep_workloads: one scan call serves several workloads, and
+    per-workload rows reflect their own trace."""
+    jobs, ws = workload
+    jobs2 = [j for j in traces.sdsc_blue(seed=3) if j.submit < T]
+    ws2 = [(t, d) for t, d in traces.worldcup98(seed=4, peak_vms=64)
+           if t < T]
+    pts = [SweepPoint("fb", capacity=160),
+           SweepPoint("flb_nub", lb_pbj=13, lb_ws=12),
+           SweepPoint("ec2", lease_seconds=3600.0)]
+    rows = run_sweep_workloads(pts, [(jobs, ws), (jobs2, ws2)], T,
+                               mode="scan")
+    assert len(rows) == 2 and all(len(r) == len(pts) for r in rows)
+    for w, (wl_jobs, _) in enumerate([(jobs, ws), (jobs2, ws2)]):
+        assert rows[w][0]["engine"] == "scan"
+        assert rows[w][1]["engine"] == "scan"
+        assert rows[w][2]["engine"] == "vectorized"
+        ref = run_sweep(pts, *([(jobs, ws), (jobs2, ws2)][w]), T,
+                        mode="event")
+        for i in (0, 1):
+            assert abs(rows[w][i]["completed_jobs"]
+                       - ref[i]["completed_jobs"]) \
+                <= max(5, 0.05 * ref[i]["completed_jobs"])
+    # The two workloads genuinely differ, and so must their rows.
+    assert rows[0][1]["node_hours"] != rows[1][1]["node_hours"]
