@@ -7,13 +7,17 @@ metric) and dump all rows to results/tables.json. The roofline table
 
 ``python -m benchmarks.run sweep`` instead benchmarks the sweep engine's
 execution paths against each other — per-point event engine vs the
-batched ``mode="scan"`` fast path — on the paper's FB / FLB-NUB grids
-(Figs. 13/14/18) across workload traces, writes
-``results/BENCH_sweep.json`` (wall-clock, points/sec, per-point fidelity
-drift) and, with ``--check-fidelity X``, exits non-zero when any point's
-completed-jobs or node-hours drift exceeds the fraction ``X`` — the CI
-smoke gate. ``--tiny`` shrinks the study to a two-day trace slice for
-fast CI runs.
+batched ``mode="scan"`` fast path vs the device-sharded scan — on the
+paper's FB / FLB-NUB grids (Figs. 13/14/18) across workload traces,
+writes ``results/BENCH_sweep.json`` (wall-clock, points/sec, per-point
+fidelity drift) and, with ``--check-fidelity X``, exits non-zero when
+any point's completed-jobs or node-hours drift exceeds the fraction
+``X`` — the CI smoke gate. ``--tiny`` shrinks the study to a two-day
+trace slice for fast CI runs. ``--devices N`` also times the
+shard_map backend over N devices; on a CPU-only host it sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for you (all
+imports of jax are deferred until after the flag is in place, so one
+plain invocation measures real multi-core scaling).
 """
 
 import argparse
@@ -24,9 +28,6 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(
     os.path.dirname(os.path.abspath(__file__))), "src"))
-
-from benchmarks.tables import ALL_TABLES            # noqa: E402
-from benchmarks import roofline                     # noqa: E402
 
 
 def _derived(name, rows):
@@ -63,12 +64,20 @@ def _derived(name, rows):
     return f"rows={len(rows)}"
 
 
-def sweep_benchmark(tiny: bool = False) -> dict:
-    """Event engine vs batched scan on the paper's coordinated-policy
-    grids. Returns the BENCH_sweep.json payload."""
+def sweep_benchmark(tiny: bool = False, devices: int = 0) -> dict:
+    """Event engine vs batched scan (vs the sharded scan when
+    ``devices >= 2``) on the paper's coordinated-policy grids. Returns
+    the BENCH_sweep.json payload."""
+    import jax
+    from repro import compat
     from repro.sim import traces
     from repro.core.profiles import scale_profile
     from repro.sim.sweep import SweepPoint, run_sweep_workloads
+
+    if devices:
+        # Fail before the (minutes-long) event baseline, with the single
+        # authoritative diagnosis.
+        compat.resolve_devices(devices)
 
     if tiny:
         horizon = 2 * 24 * 3600.0
@@ -130,7 +139,29 @@ def sweep_benchmark(tiny: bool = False) -> dict:
                    "wall_s": round(scan_wall, 4),
                    "points_per_sec": round(n_evals / scan_wall, 2)}
     out["speedup"] = round(event_wall / scan_wall, 2)
-    import jax
+
+    sharded_rows = None
+    if devices and devices >= 2:
+        t0 = time.time()
+        sharded_rows = run_sweep_workloads(points, workloads, horizon,
+                                           mode="scan", devices=devices)
+        sharded_compile = time.time() - t0
+        t0 = time.time()
+        sharded_rows = run_sweep_workloads(points, workloads, horizon,
+                                           mode="scan", devices=devices)
+        sharded_wall = max(time.time() - t0, 1e-6)
+        out["scan_sharded"] = {
+            "devices": devices,
+            "compile_plus_run_s": round(sharded_compile, 4),
+            "wall_s": round(sharded_wall, 4),
+            "points_per_sec": round(n_evals / sharded_wall, 2),
+            "speedup_vs_event": round(event_wall / sharded_wall, 2),
+            "speedup_vs_scan": round(scan_wall / sharded_wall, 2),
+            # The sharded backend runs the identical per-lane program —
+            # any row mismatch vs the single-device scan is a bug.
+            "rows_match_scan": sharded_rows == scan_rows,
+        }
+
     out["backend"] = {"devices": [str(d) for d in jax.devices()],
                       "cpu_count": os.cpu_count()}
     out["note"] = ("scan wall-clock is one jitted XLA program over the "
@@ -138,7 +169,9 @@ def sweep_benchmark(tiny: bool = False) -> dict:
                    "per lane, so the speedup over the per-point Python "
                    "event engine scales with the host's SIMD width / core "
                    "count / accelerator, while the event path is "
-                   "single-core Python either way")
+                   "single-core Python either way. scan_sharded splits "
+                   "the (point x trace) lanes across host devices "
+                   "(shard_map) and reports the same rows as scan")
 
     drift, comparisons = [], []
     for w in range(len(workloads)):
@@ -162,6 +195,9 @@ def sweep_benchmark(tiny: bool = False) -> dict:
                 "drift_node_hours": round(dn, 4),
                 "drift_peak": round(dp, 4)})
     out["max_drift"] = round(max(drift), 4)
+    if sharded_rows is not None and not out["scan_sharded"]["rows_match_scan"]:
+        # Surface a sharding bug through the same CI gate as fidelity.
+        out["max_drift"] = max(out["max_drift"], 1.0)
     out["comparisons"] = comparisons
     return out
 
@@ -170,20 +206,34 @@ def run_sweep_bench(argv) -> int:
     ap = argparse.ArgumentParser(prog="benchmarks.run sweep")
     ap.add_argument("--tiny", action="store_true",
                     help="two-day trace slice, 4-point grid (CI smoke)")
+    ap.add_argument("--devices", type=int, default=0, metavar="N",
+                    help="also time the sharded scan over N host devices "
+                    "(forces N XLA CPU devices when jax is not yet loaded)")
     ap.add_argument("--check-fidelity", type=float, default=None,
                     metavar="FRAC", help="exit 1 if any point's completed-"
                     "jobs or node-hours drift exceeds FRAC")
     ap.add_argument("--out", default="results/BENCH_sweep.json")
     args = ap.parse_args(argv)
-    out = sweep_benchmark(tiny=args.tiny)
+    if args.devices >= 2:
+        from repro.hostdev import force_host_device_count
+        force_host_device_count(args.devices)
+    out = sweep_benchmark(tiny=args.tiny, devices=args.devices)
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
-    print(f"evals={out['evals']} event={out['event']['wall_s']}s "
-          f"({out['event']['points_per_sec']} pts/s) "
-          f"scan={out['scan']['wall_s']}s "
-          f"({out['scan']['points_per_sec']} pts/s) "
-          f"speedup={out['speedup']}x max_drift={out['max_drift']}")
+    line = (f"evals={out['evals']} event={out['event']['wall_s']}s "
+            f"({out['event']['points_per_sec']} pts/s) "
+            f"scan={out['scan']['wall_s']}s "
+            f"({out['scan']['points_per_sec']} pts/s) "
+            f"speedup={out['speedup']}x max_drift={out['max_drift']}")
+    if "scan_sharded" in out:
+        sh = out["scan_sharded"]
+        line += (f" sharded[{sh['devices']}]={sh['wall_s']}s "
+                 f"({sh['points_per_sec']} pts/s, "
+                 f"{sh['speedup_vs_event']}x event, "
+                 f"{sh['speedup_vs_scan']}x scan, "
+                 f"rows_match={sh['rows_match_scan']})")
+    print(line)
     print(f"# -> {args.out}")
     if args.check_fidelity is not None and out["max_drift"] > args.check_fidelity:
         print(f"FIDELITY DRIFT {out['max_drift']} exceeds "
@@ -193,6 +243,9 @@ def run_sweep_bench(argv) -> int:
 
 
 def main() -> None:
+    # Deferred so `sweep --devices N` can set XLA_FLAGS first.
+    from benchmarks.tables import ALL_TABLES
+    from benchmarks import roofline
     os.makedirs("results", exist_ok=True)
     all_rows = {}
     print("name,us_per_call,derived")

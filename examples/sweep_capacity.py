@@ -13,7 +13,12 @@ stateful PhoenixCloud policies run:
         (approximate: jobs ±2 %, node-hours ±15 %, trends exact)
   event everything on the event engine (the cross-validation reference)
 
+``--devices N`` shards the scan path's (point × trace) lanes across N
+host devices (forcing N XLA CPU devices when needed) — the multi-core
+backend of the sweep engine.
+
 Run:  PYTHONPATH=src python examples/sweep_capacity.py [--mode scan]
+      [--devices 2]
 """
 import argparse
 import os
@@ -21,16 +26,30 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--mode", default="auto",
+                help="execution path for the FB / FLB-NUB points")
+ap.add_argument("--devices", type=int, default=0,
+                help="shard the scan lanes across N host devices "
+                "(requires --mode scan)")
+args = ap.parse_args()
+
+if args.devices >= 2:
+    if args.mode != "scan":
+        # Only the scan path consumes the devices option — anything else
+        # would silently run unsharded.
+        ap.error("--devices requires --mode scan")
+    from repro.hostdev import force_host_device_count
+    force_host_device_count(args.devices)
+
 import numpy as np
 
 from repro.core.profiles import job_demand_profile
 from repro.sim import traces
 from repro.sim.sweep import MODES, paper_grid, run_sweep
 
-ap = argparse.ArgumentParser()
-ap.add_argument("--mode", choices=MODES, default="auto",
-                help="execution path for the FB / FLB-NUB points")
-args = ap.parse_args()
+if args.mode not in MODES:
+    ap.error(f"--mode must be one of {MODES}")
 
 T = traces.TWO_WEEKS
 jobs = traces.nasa_ipsc(seed=0)
@@ -45,7 +64,7 @@ print(f"PBJ demand profile: peak {profile.max():.0f} nodes/h, "
 
 PRC_PBJ, PRC_WS = 128, 128
 rows = run_sweep(paper_grid(prc_pbj=PRC_PBJ, prc_ws=PRC_WS), jobs, ws, T,
-                 mode=args.mode)
+                 mode=args.mode, devices=args.devices or None)
 
 print(f"{'point':22s} {'engine':>10s} {'jobs':>5s} {'peak':>6s} "
       f"{'node-h':>9s} {'adjusts':>8s}")

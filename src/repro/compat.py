@@ -9,6 +9,8 @@ code runs on both.
 
 from __future__ import annotations
 
+from typing import List, Optional, Sequence, Union
+
 import jax
 
 try:
@@ -18,7 +20,41 @@ except AttributeError:
     from jax.experimental.shard_map import shard_map as _shard_map
     _CHECK_KWARG = "check_rep"
 
-__all__ = ["shard_map", "axis_size"]
+__all__ = ["shard_map", "axis_size", "resolve_devices"]
+
+# The devices argument accepted across the repo's sharded entry points:
+# a device count, an explicit device sequence, or None (single-device).
+Devices = Optional[Union[int, Sequence["jax.Device"]]]
+
+
+def resolve_devices(devices: Devices) -> Optional[List["jax.Device"]]:
+    """Normalize a ``devices`` option to a device list, or ``None``.
+
+    ``None`` means single-device execution; an int ``n`` takes the first
+    ``n`` visible devices; an explicit sequence is used as-is. A resolved
+    list of fewer than two devices collapses to ``None`` — sharding over
+    one device buys nothing, and single-device callers keep their plain
+    (bit-identical) path. On a CPU-only host, multiple XLA devices exist
+    only when ``XLA_FLAGS=--xla_force_host_platform_device_count=n`` was
+    set before jax initialized — the error message says so, because that
+    is the whole trick to harvesting multi-core from one process.
+    """
+    if devices is None:
+        return None
+    if isinstance(devices, int):
+        if devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        avail = jax.devices()
+        if devices > len(avail):
+            raise ValueError(
+                f"devices={devices} requested but only {len(avail)} jax "
+                f"device(s) visible; on CPU set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={devices} in the "
+                f"environment before jax is imported")
+        devs = list(avail[:devices])
+    else:
+        devs = list(devices)
+    return devs if len(devs) > 1 else None
 
 
 def axis_size(axis: str) -> int:

@@ -1,0 +1,38 @@
+"""Force XLA host-device count before jax initializes — jax-free.
+
+On CPU-only machines XLA exposes one device per process unless
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` is in the
+environment *before* jax touches its backends. The sweep CLIs
+(``benchmarks.run sweep --devices N``, ``examples/sweep_capacity.py
+--devices N``) call :func:`force_host_device_count` straight after
+argument parsing, ahead of any import that pulls jax, so a single plain
+invocation can exercise the sharded sweep backend. This module must
+stay importable without jax (stdlib only) or the call would defeat
+itself by initializing the backends it is trying to configure.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_device_count(n: int) -> bool:
+    """Request ``n`` XLA host devices via the force flag.
+
+    Returns ``True`` when the flag is in place before jax has loaded
+    (whether set here or already present — a pre-existing flag, e.g.
+    exported by CI, wins and is left untouched). Returns ``False`` when
+    jax is already initialized, in which case the flag would be ignored;
+    callers then get the authoritative error from
+    ``repro.compat.resolve_devices`` once the device count falls short.
+    """
+    if FLAG in os.environ.get("XLA_FLAGS", ""):
+        return True
+    if "jax" in sys.modules:
+        return False
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {FLAG}={n}").strip()
+    return True

@@ -8,7 +8,12 @@ those used to fall back to one Python event simulation per point. This
 module re-expresses both policies as one jitted, twice-vmapped
 ``lax.scan`` so a whole (system, parameter, trace) grid runs as a single
 XLA program: axis 0 batches packed workload traces, axis 1 batches sweep
-points.
+points. With ``devices`` set, ``scan_grids`` flattens the two batch axes
+into one lane axis and ``shard_map``s it across host devices (padding
+lanes to a device multiple, dropping the padding from the results), so
+the grid's throughput scales with the machine instead of one core's
+SIMD width — on CPU-only hosts, split the cores into XLA devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 
 Design (the scan-friendly queue/kill encoding)
 ----------------------------------------------
@@ -51,6 +56,14 @@ Design (the scan-friendly queue/kill encoding)
   granularity: FB's allocation hugs C between WS moves so ``FB_DT``
   is coarse; the FLB-NUB U/V/G feedback needs ``FLB_DT`` (both
   validated against the event engine at these settings).
+* **Event-faithful tick ordering.** Within an FLB-NUB tick substep the
+  event engine's sequence is pool grant → first-fit → U/V/G adjust →
+  first-fit again on the request grant, and the scan replays exactly
+  that: the adjustment reads *post-start* demand and free. Evaluating
+  U/V/G on pre-start state looks harmless but lets one tick absorb a
+  whole submit burst as a single DR1 request the event engine would
+  have started incrementally — >50 % peak overshoot on long-lease
+  (L ≥ 2 h) grids under scaled WS demand.
 
 Fidelity contract (cross-validated in tests/test_sweep.py): completed
 jobs within 2 %, node-hours within 15 %, peak within 15 % of the event
@@ -67,7 +80,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec
 
+from repro import compat
+from repro.compat import shard_map
 from repro.core.jobs import Job
 from repro.core.pbj_manager import PBJPolicyParams
 from repro.core.profiles import sample_steps, step_points
@@ -83,7 +99,7 @@ jax.tree_util.register_dataclass(
 __all__ = [
     "FBGrid", "FLBGrid", "PackedWorkloads", "ScanSpec", "pack_workloads",
     "scan_grids", "pick_dt", "DEFAULT_WINDOW", "DEFAULT_SUBSTEPS",
-    "DEFAULT_FF_PASSES", "FB_DT", "FLB_DT",
+    "DEFAULT_FF_PASSES", "FB_DT", "FLB_DT", "FLB_MIN_DT",
 ]
 
 DEFAULT_WINDOW = 192       # job-table lanes carried through the scan
@@ -97,6 +113,9 @@ FB_DT = 900.0              # default FB substep: alloc ≈ C between WS moves,
 #                            so FB tolerates a coarse grid (nh < 1 %)
 FLB_DT = 300.0             # default FLB-NUB substep: the U/V/G feedback
 #                            needs fine demand sampling (validated bound)
+FLB_MIN_DT = 60.0          # floor of the WS-spacing cap in pick_dt — a
+#                            pathological 1 s demand trace must not explode
+#                            the substep count by four orders of magnitude
 _KILL_CLASSES = 16         # power-of-two size classes for the FB kill order
 
 
@@ -342,15 +361,34 @@ def _simulate(policy: str, prm: Dict, tr_submit, tr_size, tr_runtime,
             owned = owned + grant
             pbj_ev = (grant > 0).astype(f) + (need > 0).astype(f)
             alloc = owned + ws_t
+            # 4. First-fit in arrival order over the window lanes (§6.5.2).
+            free = owned - used
+            _, starts = _first_fit(free, queued, w_sz, ff_passes)
+            run = run | starts
+            rem = jnp.where(starts, w_rt, rem)       # runtime read on start —
+            start_t = jnp.where(starts, t, start_t)  # kills reset lazily
         else:
             # 2. §5.2 rule 3: idle pool flows to the PBJ TRE on the tick.
-            demand = jnp.sum(jnp.where(queued, w_sz, 0.0))
             pool_ws = jnp.minimum(wsv, lb_ws)
             pool_idle = jnp.maximum(B - pool_ws - pool_pbj, 0.0)
             grant = jnp.where(is_tick, pool_idle, 0.0)
             owned = owned + grant
             pool_pbj = pool_pbj + grant
-            # 3. §5.2 rules 2–4: the U/V/G adjustment on the tick.
+            # 3. First-fit BEFORE the adjustment: the event engine's tick
+            # is grant → schedule → adjust → schedule, so the U/V/G rules
+            # must see post-start demand and free — evaluating them on
+            # pre-start state inflates DR1 by exactly the backlog the
+            # grant could have started, and those phantom requests
+            # compound into >50 % peak overshoots on long-lease grids.
+            free = owned - used
+            _, starts = _first_fit(free, queued, w_sz, ff_passes)
+            run = run | starts
+            rem = jnp.where(starts, w_rt, rem)
+            start_t = jnp.where(starts, t, start_t)
+            queued = queued & ~starts
+            used = used + jnp.sum(jnp.where(starts, w_sz, 0.0))
+            # 4. §5.2 rules 2–4: the U/V/G adjustment on the tick.
+            demand = jnp.sum(jnp.where(queued, w_sz, 0.0))
             ratio = jnp.where(owned > 0, demand / jnp.maximum(owned, 1.0),
                               jnp.where(demand > 0, jnp.inf, 0.0))
             biggest = jnp.max(jnp.where(queued, w_sz, 0.0))
@@ -366,15 +404,15 @@ def _simulate(policy: str, prm: Dict, tr_submit, tr_size, tr_runtime,
             pbj_ev = (req > 0).astype(f) + (rss > 0).astype(f)
             alloc = B + jnp.maximum(owned - pool_pbj, 0.0) \
                 + jnp.maximum(wsv - lb_ws, 0.0)
+            # 5. Second first-fit: the event engine runs the §6.5.2 scan
+            # again the moment a request is granted.
+            free = owned - used
+            _, starts2 = _first_fit(free, queued, w_sz, ff_passes)
+            run = run | starts2
+            rem = jnp.where(starts2, w_rt, rem)
+            start_t = jnp.where(starts2, t, start_t)
 
-        # 4. First-fit in arrival order over the window lanes (§6.5.2).
-        free = owned - used
-        _, starts = _first_fit(free, queued, w_sz, ff_passes)
-        run = run | starts
-        rem = jnp.where(starts, w_rt, rem)       # runtime read on start —
-        start_t = jnp.where(starts, t, start_t)  # kills reset lazily
-
-        # 5. Accounting (§6.1 metrics).
+        # 6. Accounting (§6.1 metrics).
         alloc = jnp.where(active, alloc, 0.0)
         acc["node_seconds"] += alloc * dt
         acc["peak"] = jnp.maximum(acc["peak"], alloc)
@@ -445,18 +483,13 @@ def _simulate(policy: str, prm: Dict, tr_submit, tr_size, tr_runtime,
 
 
 @functools.partial(jax.jit, static_argnames=("fb_spec", "flb_spec"))
-def scan_grids(fb: Optional[FBGrid], flb: Optional[FLBGrid],
-               fb_packed: Optional[PackedWorkloads],
-               flb_packed: Optional[PackedWorkloads], *,
-               fb_spec: Optional[ScanSpec] = None,
-               flb_spec: Optional[ScanSpec] = None
-               ) -> Dict[str, Dict[str, jnp.ndarray]]:
-    """Evaluate FB and FLB-NUB sweep grids over all packed workloads in
-    one jitted program. Returns ``{"fb": metrics, "flb_nub": metrics}``
-    where each metric array has shape ``(W, P_policy)``; a policy is
-    skipped when its spec is ``None``. Each policy runs at its own
-    (static) :class:`ScanSpec` — the packs may use different substeps.
-    """
+def _scan_grids_single(fb: Optional[FBGrid], flb: Optional[FLBGrid],
+                       fb_packed: Optional[PackedWorkloads],
+                       flb_packed: Optional[PackedWorkloads], *,
+                       fb_spec: Optional[ScanSpec] = None,
+                       flb_spec: Optional[ScanSpec] = None
+                       ) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Single-device execution: the (trace, point) grid as nested vmaps."""
     def run(policy, prm_tree, packed, spec):
         one = lambda prm, s, z, r, w, w0, wc, h: _simulate(
             policy, prm, s, z, r, w, w0, wc, h, spec)
@@ -468,18 +501,136 @@ def scan_grids(fb: Optional[FBGrid], flb: Optional[FLBGrid],
 
     out: Dict[str, Dict[str, jnp.ndarray]] = {}
     if fb_spec is not None:
-        out["fb"] = run("fb", {"capacity": fb.capacity, "lease": fb.lease},
-                        fb_packed, fb_spec)
+        out["fb"] = run("fb", _prm_tree("fb", fb), fb_packed, fb_spec)
     if flb_spec is not None:
-        out["flb_nub"] = run("flb_nub", {
-            "B": flb.B, "lb_ws": flb.lb_ws, "U": flb.U, "V": flb.V,
-            "G": flb.G, "lease": flb.lease}, flb_packed, flb_spec)
+        out["flb_nub"] = run("flb_nub", _prm_tree("flb_nub", flb),
+                             flb_packed, flb_spec)
     return out
 
 
-def pick_dt(policy: str, leases: Sequence[float]) -> float:
+def _prm_tree(policy: str, grid) -> Dict[str, jnp.ndarray]:
+    if policy == "fb":
+        return {"capacity": grid.capacity, "lease": grid.lease}
+    return {"B": grid.B, "lb_ws": grid.lb_ws, "U": grid.U, "V": grid.V,
+            "G": grid.G, "lease": grid.lease}
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "spec", "mesh"))
+def _lanes_sharded(prm_tree, packed: PackedWorkloads, w_idx, p_idx, *,
+                   policy: str, spec: ScanSpec, mesh):
+    """One policy's flattened (trace, point) lanes split across ``mesh``.
+
+    ``w_idx`` / ``p_idx`` map each lane to its workload row and sweep
+    point; they are sharded over the mesh's ``lanes`` axis while the
+    grid and the packed workloads stay replicated, so each device
+    gathers just its own lane slice and runs the plain vmapped scan on
+    it — no collectives, the lanes are embarrassingly parallel.
+    """
+    def lanes(w_l, p_l, prm, pk):
+        prm_l = jax.tree_util.tree_map(lambda a: a[p_l], prm)
+        one = lambda prm1, s, z, r, w, w0, wc, h: _simulate(
+            policy, prm1, s, z, r, w, w0, wc, h, spec)
+        return jax.vmap(one)(prm_l, pk.submit[w_l], pk.size[w_l],
+                             pk.runtime[w_l], pk.ws[w_l], pk.ws0[w_l],
+                             pk.ws_changed[w_l], pk.hi_chunk[w_l])
+
+    lane = PartitionSpec("lanes")
+    rep = PartitionSpec()
+    fn = shard_map(lanes, mesh, in_specs=(lane, lane, rep, rep),
+                   out_specs=lane, check_vma=False)
+    return fn(w_idx, p_idx, prm_tree, packed)
+
+
+def _scan_grids_sharded(fb, flb, fb_packed, flb_packed, fb_spec, flb_spec,
+                        devices) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Shard each policy's (trace × point) lanes across ``devices``.
+
+    Lanes are padded up to a multiple of the device count with copies of
+    lane 0 (every device needs an equal shard); the padding is dropped
+    before the metrics are reshaped back to ``(W, P)``, so padded lanes
+    never reach a reported metric. Each lane runs the identical
+    ``_simulate`` program the single-device path vmaps, so per-lane
+    results do not depend on the device split.
+    """
+    mesh = Mesh(np.asarray(devices), ("lanes",))
+    d = len(devices)
+
+    def run(policy, grid, packed, spec):
+        prm_tree = _prm_tree(policy, grid)
+        w = int(packed.submit.shape[0])
+        p = int(grid.lease.shape[0])
+        n = w * p
+        pad = -n % d
+        w_idx = np.concatenate([np.repeat(np.arange(w), p),
+                                np.zeros(pad, np.int64)]).astype(np.int32)
+        p_idx = np.concatenate([np.tile(np.arange(p), w),
+                                np.zeros(pad, np.int64)]).astype(np.int32)
+        flat = _lanes_sharded(prm_tree, packed, jnp.asarray(w_idx),
+                              jnp.asarray(p_idx), policy=policy, spec=spec,
+                              mesh=mesh)
+        return {k: v[:n].reshape(w, p) for k, v in flat.items()}
+
+    out: Dict[str, Dict[str, jnp.ndarray]] = {}
+    if fb_spec is not None:
+        out["fb"] = run("fb", fb, fb_packed, fb_spec)
+    if flb_spec is not None:
+        out["flb_nub"] = run("flb_nub", flb, flb_packed, flb_spec)
+    return out
+
+
+def scan_grids(fb: Optional[FBGrid], flb: Optional[FLBGrid],
+               fb_packed: Optional[PackedWorkloads],
+               flb_packed: Optional[PackedWorkloads], *,
+               fb_spec: Optional[ScanSpec] = None,
+               flb_spec: Optional[ScanSpec] = None,
+               devices: compat.Devices = None
+               ) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Evaluate FB and FLB-NUB sweep grids over all packed workloads in
+    one jitted program. Returns ``{"fb": metrics, "flb_nub": metrics}``
+    where each metric array has shape ``(W, P_policy)``; a policy is
+    skipped when its spec is ``None``. Each policy runs at its own
+    (static) :class:`ScanSpec` — the packs may use different substeps.
+
+    ``devices`` (``None`` | device count | device sequence, see
+    ``repro.compat.resolve_devices``) selects the execution backend:
+    ``None`` / one device runs the nested-vmap program on the default
+    device; two or more shard the flattened (trace × point) lane axis
+    across the devices with ``shard_map``, padding the lane count up to
+    a device multiple and dropping the padding from the results. The
+    sharded path computes the identical per-lane program, only placed
+    differently, so its rows are bit-identical to the single-device
+    path's (tests/test_sweep_sharded.py pins this).
+    """
+    devs = compat.resolve_devices(devices)
+    if devs is None:
+        return _scan_grids_single(fb, flb, fb_packed, flb_packed,
+                                  fb_spec=fb_spec, flb_spec=flb_spec)
+    return _scan_grids_sharded(fb, flb, fb_packed, flb_packed,
+                               fb_spec, flb_spec, devs)
+
+
+def pick_dt(policy: str, leases: Sequence[float],
+            ws_traces: Optional[Sequence[Sequence[Tuple[float, int]]]] = None,
+            duration: Optional[float] = None) -> float:
     """Default substep for a policy's grid: the validated granularity
     (``FB_DT`` / ``FLB_DT``), never coarser than the shortest lease in
-    the grid (so every lease gets at least one policy substep)."""
+    the grid (so every lease gets at least one policy substep).
+
+    For FLB-NUB the substep is additionally capped by the shortest WS
+    change-point spacing across ``ws_traces`` (floored at
+    ``FLB_MIN_DT``): the scan samples WS demand once per substep, and a
+    demand trace finer than the substep would alias the U/V/G feedback
+    the §5.2 policy runs on. Change points at or beyond ``duration`` are
+    ignored — the scan never simulates them, so they must not shrink the
+    substep. The paper's World Cup profile steps every 300 s — exactly
+    ``FLB_DT`` — so the cap only bites on finer traces.
+    """
     base = FB_DT if policy == "fb" else FLB_DT
-    return min(base, min(leases))
+    dt = min(base, min(leases))
+    if policy == "flb_nub" and ws_traces:
+        horizon = duration if duration is not None else np.inf
+        spacing = min((b - a for trace in ws_traces
+                       for (a, _), (b, _) in zip(trace, trace[1:])
+                       if b > a and a < horizon), default=dt)
+        dt = min(dt, max(spacing, FLB_MIN_DT))
+    return dt

@@ -59,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro import compat
 from repro.core.jobs import Job
 from repro.core.pbj_manager import PBJPolicyParams
 from repro.core.profiles import step_integral, step_points
@@ -124,18 +125,25 @@ class ScanOptions:
     ``repro.sim.scan``). The defaults are the settings the fidelity
     contract is validated at; ``dt=None`` picks each policy's validated
     substep (``scanlib.pick_dt`` — FB coarse, FLB-NUB fine), capped by
-    the grid's shortest lease."""
+    the grid's shortest lease and, for FLB-NUB, by the workloads' WS
+    change-point spacing. ``devices`` selects the execution backend
+    (``repro.compat.resolve_devices``): ``None`` runs the whole grid on
+    one device, a count or device sequence shards the (point × trace)
+    lanes across host devices via ``shard_map``."""
 
     dt: Optional[float] = None
     window: Optional[int] = None
     chunk_len: Optional[int] = None
     ff_passes: int = scanlib.DEFAULT_FF_PASSES
     dtype: Optional[np.dtype] = None
+    devices: compat.Devices = None
 
     def resolve(self, policy: str, leases: Sequence[float],
-                duration: float) -> scanlib.ScanSpec:
-        dt = self.dt if self.dt is not None else scanlib.pick_dt(policy,
-                                                                 leases)
+                duration: float,
+                ws_traces: Optional[Sequence[Sequence[Tuple[float, int]]]]
+                = None) -> scanlib.ScanSpec:
+        dt = self.dt if self.dt is not None else scanlib.pick_dt(
+            policy, leases, ws_traces, duration)
         window = (self.window if self.window is not None else
                   (scanlib.FB_WINDOW if policy == "fb"
                    else scanlib.FLB_WINDOW))
@@ -289,7 +297,12 @@ def _sweep_scan(points: List[SweepPoint],
         # The scan kill encoding resets a killed lane to its full runtime
         # (repro.sim.scan); the beyond-paper checkpoint-preempt mode only
         # exists on the event engine — fail loudly rather than silently
-        # report full-restart metrics for a preemption study.
+        # report full-restart metrics for a preemption study. The guard
+        # is FB-only on purpose: FLB-NUB never force-releases (§5.2
+        # satisfies WS elastically and only ever releases *free* nodes),
+        # so it has no kills for the preemption mode to change —
+        # tests/test_scan_policies.py::test_flb_nub_never_kills pins
+        # that invariant, making the exemption safe.
         if p.system == "fb" and p.params.checkpoint_preempt:
             raise ValueError(
                 f"{p.name()}: checkpoint_preempt is not supported by "
@@ -297,6 +310,7 @@ def _sweep_scan(points: List[SweepPoint],
                 f"mode=\"event\"")
     fb_idx = [i for i, p in enumerate(points) if p.system == "fb"]
     flb_idx = [i for i, p in enumerate(points) if p.system == "flb_nub"]
+    ws_traces = [ws for _, ws in workloads]
 
     fb = flb = fb_packed = flb_packed = fb_spec = flb_spec = None
     if fb_idx:
@@ -312,7 +326,8 @@ def _sweep_scan(points: List[SweepPoint],
             lease=jnp.asarray([points[i].lease_seconds for i in fb_idx], f))
     if flb_idx:
         flb_spec = options.resolve(
-            "flb_nub", [points[i].lease_seconds for i in flb_idx], duration)
+            "flb_nub", [points[i].lease_seconds for i in flb_idx], duration,
+            ws_traces=ws_traces)
         flb_packed, _ = scanlib.pack_workloads(
             workloads, duration, flb_spec.dt, window=flb_spec.window,
             chunk_len=flb_spec.chunk_len, dtype=options.dtype)
@@ -330,7 +345,8 @@ def _sweep_scan(points: List[SweepPoint],
             lease=jnp.asarray([points[i].lease_seconds for i in flb_idx], f))
 
     out = scanlib.scan_grids(fb, flb, fb_packed, flb_packed,
-                             fb_spec=fb_spec, flb_spec=flb_spec)
+                             fb_spec=fb_spec, flb_spec=flb_spec,
+                             devices=options.devices)
     out = jax.tree_util.tree_map(np.asarray, out)
 
     per_workload: List[List[Dict]] = []
@@ -374,7 +390,8 @@ def run_sweep(points: Sequence[SweepPoint], jobs: Sequence[Job],
               duration: Optional[float] = None,
               vectorize: bool = True,
               mode: Optional[str] = None,
-              scan_options: ScanOptions = ScanOptions()) -> List[Dict]:
+              scan_options: ScanOptions = ScanOptions(),
+              devices: compat.Devices = None) -> List[Dict]:
     """Evaluate every sweep point on the same (jobs, ws_trace) workload.
 
     Returns one row dict per point, in input order, each tagged with
@@ -389,6 +406,10 @@ def run_sweep(points: Sequence[SweepPoint], jobs: Sequence[Job],
     the cross-validation reference used by tests/test_sweep.py. The
     legacy ``vectorize=False`` flag is equivalent to ``mode="event"``.
 
+    ``devices`` (shorthand for ``scan_options.devices``) shards the scan
+    path's (point × trace) lanes across that many host devices — see
+    :class:`ScanOptions`. It only affects ``mode="scan"``.
+
     Vectorized DCS rows carry cost/peak metrics only (use ``.get`` or
     ``mode="event"`` when job metrics are needed for a DCS point); scan
     rows carry the full metric set but job metrics are approximations
@@ -396,7 +417,8 @@ def run_sweep(points: Sequence[SweepPoint], jobs: Sequence[Job],
     """
     return run_sweep_workloads(points, [(jobs, ws_trace)], duration,
                                vectorize=vectorize, mode=mode,
-                               scan_options=scan_options)[0]
+                               scan_options=scan_options,
+                               devices=devices)[0]
 
 
 def run_sweep_workloads(points: Sequence[SweepPoint],
@@ -405,7 +427,8 @@ def run_sweep_workloads(points: Sequence[SweepPoint],
                         duration: Optional[float] = None,
                         vectorize: bool = True,
                         mode: Optional[str] = None,
-                        scan_options: ScanOptions = ScanOptions()
+                        scan_options: ScanOptions = ScanOptions(),
+                        devices: compat.Devices = None
                         ) -> List[List[Dict]]:
     """Evaluate a sweep grid over SEVERAL workload traces at once.
 
@@ -416,8 +439,12 @@ def run_sweep_workloads(points: Sequence[SweepPoint],
     path per workload, and the event fallback runs per (point, workload)
     pair. All workloads share one measurement horizon ``duration``
     (§6.1) — the default is the latest horizon any workload implies.
+    ``devices`` overrides ``scan_options.devices`` (see
+    :class:`ScanOptions`).
     """
     mode = _resolve_mode(mode, vectorize)
+    if devices is not None:
+        scan_options = dataclasses.replace(scan_options, devices=devices)
     if duration is None:
         duration = max(default_duration(jobs, ws) for jobs, ws in workloads)
     rows: List[List[Optional[Dict]]] = [
