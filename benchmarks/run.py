@@ -7,17 +7,26 @@ metric) and dump all rows to results/tables.json. The roofline table
 
 ``python -m benchmarks.run sweep`` instead benchmarks the sweep engine's
 execution paths against each other — per-point event engine vs the
-batched ``mode="scan"`` fast path vs the device-sharded scan — on the
-paper's FB / FLB-NUB grids (Figs. 13/14/18) across workload traces,
-writes ``results/BENCH_sweep.json`` (wall-clock, points/sec, per-point
-fidelity drift) and, with ``--check-fidelity X``, exits non-zero when
-any point's completed-jobs or node-hours drift exceeds the fraction
-``X`` — the CI smoke gate. ``--tiny`` shrinks the study to a two-day
-trace slice for fast CI runs. ``--devices N`` also times the
-shard_map backend over N devices; on a CPU-only host it sets
-``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for you (all
-imports of jax are deferred until after the flag is in place, so one
-plain invocation measures real multi-core scaling).
+batched ``mode="scan"`` fast path vs the event-round ``mode="rounds"``
+engine vs their device-sharded variants — on the paper's FB / FLB-NUB
+grids (Figs. 13/14/18) across workload traces, writes
+``results/BENCH_sweep.json`` (wall-clock, points/sec, per-point
+fidelity drift for both fast engines) and, with ``--check-fidelity X``,
+exits non-zero when any scan point's completed-jobs or node-hours drift
+exceeds the fraction ``X`` or any rounds point misses its tighter
+contract (completed jobs exact, node-hours/peak within 5 %, sharded
+rows bit-identical) — the CI smoke gate. ``--perf-gate R`` additionally
+fails when the rounds engine's steady-state points/sec falls below
+``R ×`` the scan engine's (the regression gate; both engines share the
+per-step machinery, so a rounds-only slowdown is a real regression).
+``--tiny`` shrinks the study to a two-day trace slice for fast CI runs.
+``--devices N`` also times the shard_map backends over N devices; on a
+CPU-only host it sets ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+for you (all imports of jax are deferred until after the flag is in
+place, so one plain invocation measures real multi-core scaling). The
+run also asserts that no buffer-donation ("aliasing") warnings escaped
+the jitted fast paths — donation is platform-gated in ``repro.compat``
+and must stay silent on hosts without it.
 """
 
 import argparse
@@ -65,9 +74,11 @@ def _derived(name, rows):
 
 
 def sweep_benchmark(tiny: bool = False, devices: int = 0) -> dict:
-    """Event engine vs batched scan (vs the sharded scan when
-    ``devices >= 2``) on the paper's coordinated-policy grids. Returns
-    the BENCH_sweep.json payload."""
+    """Event engine vs batched scan vs event-round engine (vs their
+    sharded variants when ``devices >= 2``) on the paper's
+    coordinated-policy grids. Returns the BENCH_sweep.json payload."""
+    import warnings
+
     import jax
     from repro import compat
     from repro.sim import traces
@@ -125,22 +136,47 @@ def sweep_benchmark(tiny: bool = False, devices: int = 0) -> dict:
                                      mode="event")
     event_wall = time.time() - t0
 
-    t0 = time.time()
-    scan_rows = run_sweep_workloads(points, workloads, horizon, mode="scan")
-    compile_wall = time.time() - t0
-    t0 = time.time()
-    scan_rows = run_sweep_workloads(points, workloads, horizon, mode="scan")
-    scan_wall = max(time.time() - t0, 1e-6)
+    # Any donation ("aliasing") warning from the jitted fast paths means
+    # the compat platform gate failed — record them and gate below.
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+
+        t0 = time.time()
+        scan_rows = run_sweep_workloads(points, workloads, horizon,
+                                        mode="scan")
+        scan_compile = time.time() - t0
+        t0 = time.time()
+        scan_rows = run_sweep_workloads(points, workloads, horizon,
+                                        mode="scan")
+        scan_wall = max(time.time() - t0, 1e-6)
+
+        t0 = time.time()
+        rounds_rows = run_sweep_workloads(points, workloads, horizon,
+                                          mode="rounds")
+        rounds_compile = time.time() - t0
+        t0 = time.time()
+        rounds_rows = run_sweep_workloads(points, workloads, horizon,
+                                          mode="rounds")
+        rounds_wall = max(time.time() - t0, 1e-6)
+    donation_warnings = [str(w.message) for w in caught
+                         if "donat" in str(w.message).lower()
+                         or "alias" in str(w.message).lower()]
 
     out["event"] = {"wall_s": round(event_wall, 4),
                     "points_per_sec": round(n_evals / max(event_wall, 1e-6),
                                             2)}
-    out["scan"] = {"compile_plus_run_s": round(compile_wall, 4),
+    out["scan"] = {"compile_plus_run_s": round(scan_compile, 4),
                    "wall_s": round(scan_wall, 4),
                    "points_per_sec": round(n_evals / scan_wall, 2)}
+    out["rounds"] = {"compile_plus_run_s": round(rounds_compile, 4),
+                     "wall_s": round(rounds_wall, 4),
+                     "points_per_sec": round(n_evals / rounds_wall, 2),
+                     "speedup_vs_event": round(event_wall / rounds_wall, 2),
+                     "speedup_vs_scan": round(scan_wall / rounds_wall, 2)}
     out["speedup"] = round(event_wall / scan_wall, 2)
+    out["donation_warnings"] = donation_warnings
 
-    sharded_rows = None
+    sharded_rows = rounds_sharded_rows = None
     if devices and devices >= 2:
         t0 = time.time()
         sharded_rows = run_sweep_workloads(points, workloads, horizon,
@@ -161,44 +197,98 @@ def sweep_benchmark(tiny: bool = False, devices: int = 0) -> dict:
             # any row mismatch vs the single-device scan is a bug.
             "rows_match_scan": sharded_rows == scan_rows,
         }
+        t0 = time.time()
+        rounds_sharded_rows = run_sweep_workloads(
+            points, workloads, horizon, mode="rounds", devices=devices)
+        rsh_compile = time.time() - t0
+        t0 = time.time()
+        rounds_sharded_rows = run_sweep_workloads(
+            points, workloads, horizon, mode="rounds", devices=devices)
+        rsh_wall = max(time.time() - t0, 1e-6)
+        out["rounds_sharded"] = {
+            "devices": devices,
+            "compile_plus_run_s": round(rsh_compile, 4),
+            "wall_s": round(rsh_wall, 4),
+            "points_per_sec": round(n_evals / rsh_wall, 2),
+            "speedup_vs_event": round(event_wall / rsh_wall, 2),
+            "speedup_vs_rounds": round(rounds_wall / rsh_wall, 2),
+            "rows_match_rounds": rounds_sharded_rows == rounds_rows,
+        }
 
     out["backend"] = {"devices": [str(d) for d in jax.devices()],
                       "cpu_count": os.cpu_count()}
-    out["note"] = ("scan wall-clock is one jitted XLA program over the "
-                   "whole (policy, point, trace) grid; it is compute-bound "
-                   "per lane, so the speedup over the per-point Python "
-                   "event engine scales with the host's SIMD width / core "
-                   "count / accelerator, while the event path is "
-                   "single-core Python either way. scan_sharded splits "
-                   "the (point x trace) lanes across host devices "
-                   "(shard_map) and reports the same rows as scan")
+    out["note"] = ("all fast paths are jitted XLA programs batched over "
+                   "the (policy, point) grid — compute-bound per lane, so "
+                   "their speedup over the per-point Python event engine "
+                   "scales with the host's cores/SIMD/accelerator. scan "
+                   "advances every lane on a fixed dt; rounds jumps "
+                   "lane-by-lane to the next event (exact completions and "
+                   "allocation integrals — see its tighter drift columns). "
+                   "On the paper traces the event density matches the "
+                   "scan's substep density, so the engines run at similar "
+                   "wall-clock; the rounds engine pulls ahead on demand "
+                   "traces finer than the scan's FLB_MIN_DT floor, and "
+                   "its fidelity contract (completed exact, <=5% "
+                   "node-hours/peak) holds everywhere. *_sharded split "
+                   "the lanes across host devices (shard_map) and must "
+                   "report bit-identical rows")
 
-    drift, comparisons = [], []
-    for w in range(len(workloads)):
-        for i, p in enumerate(points):
-            ev, sc = event_rows[w][i], scan_rows[w][i]
-            dj = abs(sc["completed_jobs"] - ev["completed_jobs"]) \
-                / max(1, ev["completed_jobs"])
-            dn = abs(sc["node_hours"] - ev["node_hours"]) \
-                / max(1e-9, ev["node_hours"])
-            dp = abs(sc["peak_nodes"] - ev["peak_nodes"]) \
-                / max(1, ev["peak_nodes"])
-            drift.append(max(dj, dn))
-            comparisons.append({
-                "point": p.name(), "workload": w,
-                "event": {m: ev[m] for m in ("completed_jobs", "node_hours",
-                                             "peak_nodes", "kills")},
-                "scan": {m: sc[m] for m in ("completed_jobs", "node_hours",
-                                            "peak_nodes", "kills",
-                                            "window_overflow")},
-                "drift_completed": round(dj, 4),
-                "drift_node_hours": round(dn, 4),
-                "drift_peak": round(dp, 4)})
-    out["max_drift"] = round(max(drift), 4)
+    def _drift(rows):
+        worst, comparisons = [], []
+        for w in range(len(workloads)):
+            for i, p in enumerate(points):
+                ev, fast = event_rows[w][i], rows[w][i]
+                dj = abs(fast["completed_jobs"] - ev["completed_jobs"]) \
+                    / max(1, ev["completed_jobs"])
+                dn = abs(fast["node_hours"] - ev["node_hours"]) \
+                    / max(1e-9, ev["node_hours"])
+                dp = abs(fast["peak_nodes"] - ev["peak_nodes"]) \
+                    / max(1, ev["peak_nodes"])
+                worst.append(max(dj, dn))
+                comparisons.append({
+                    "point": p.name(), "workload": w,
+                    "event": {m: ev[m] for m in
+                              ("completed_jobs", "node_hours",
+                               "peak_nodes", "kills")},
+                    "fast": {m: fast[m] for m in
+                             ("completed_jobs", "node_hours", "peak_nodes",
+                              "kills", "window_overflow")},
+                    "jobs_exact": fast["completed_jobs"]
+                    == ev["completed_jobs"],
+                    "drift_completed": round(dj, 4),
+                    "drift_node_hours": round(dn, 4),
+                    "drift_peak": round(dp, 4)})
+        return worst, comparisons
+
+    scan_drift, scan_cmp = _drift(scan_rows)
+    rounds_drift, rounds_cmp = _drift(rounds_rows)
+    out["max_drift"] = round(max(scan_drift), 4)
+    out["rounds_fidelity"] = {
+        "completed_jobs_exact": all(c["jobs_exact"] for c in rounds_cmp),
+        "max_drift_node_hours": round(max(c["drift_node_hours"]
+                                          for c in rounds_cmp), 4),
+        "max_drift_peak": round(max(c["drift_peak"]
+                                    for c in rounds_cmp), 4),
+        "truncated_lanes": sum(r.get("truncated", 0)
+                               for rows_w in rounds_rows for r in rows_w),
+    }
     if sharded_rows is not None and not out["scan_sharded"]["rows_match_scan"]:
         # Surface a sharding bug through the same CI gate as fidelity.
         out["max_drift"] = max(out["max_drift"], 1.0)
-    out["comparisons"] = comparisons
+    out["comparisons"] = scan_cmp
+    out["rounds_comparisons"] = rounds_cmp
+    # The rounds contract, folded into one gate flag: completed jobs
+    # exact, node-hours and peak within 5 %, sharded rows bit-identical,
+    # no lane truncation, no donation warnings.
+    rf = out["rounds_fidelity"]
+    out["rounds_contract_ok"] = bool(
+        rf["completed_jobs_exact"]
+        and rf["max_drift_node_hours"] <= 0.05
+        and rf["max_drift_peak"] <= 0.05
+        and rf["truncated_lanes"] == 0
+        and not donation_warnings
+        and (rounds_sharded_rows is None
+             or out["rounds_sharded"]["rows_match_rounds"]))
     return out
 
 
@@ -207,11 +297,17 @@ def run_sweep_bench(argv) -> int:
     ap.add_argument("--tiny", action="store_true",
                     help="two-day trace slice, 4-point grid (CI smoke)")
     ap.add_argument("--devices", type=int, default=0, metavar="N",
-                    help="also time the sharded scan over N host devices "
-                    "(forces N XLA CPU devices when jax is not yet loaded)")
+                    help="also time the sharded fast paths over N host "
+                    "devices (forces N XLA CPU devices when jax is not "
+                    "yet loaded)")
     ap.add_argument("--check-fidelity", type=float, default=None,
-                    metavar="FRAC", help="exit 1 if any point's completed-"
-                    "jobs or node-hours drift exceeds FRAC")
+                    metavar="FRAC", help="exit 1 if any scan point's "
+                    "completed-jobs or node-hours drift exceeds FRAC, or "
+                    "the rounds contract (jobs exact, node-hours/peak "
+                    "within 5%%, sharded rows identical) fails")
+    ap.add_argument("--perf-gate", type=float, default=None, metavar="R",
+                    help="exit 1 if the rounds engine's steady-state "
+                    "points/sec drops below R x the scan engine's")
     ap.add_argument("--out", default="results/BENCH_sweep.json")
     args = ap.parse_args(argv)
     if args.devices >= 2:
@@ -221,25 +317,43 @@ def run_sweep_bench(argv) -> int:
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
+    rd = out["rounds"]
     line = (f"evals={out['evals']} event={out['event']['wall_s']}s "
             f"({out['event']['points_per_sec']} pts/s) "
             f"scan={out['scan']['wall_s']}s "
             f"({out['scan']['points_per_sec']} pts/s) "
-            f"speedup={out['speedup']}x max_drift={out['max_drift']}")
-    if "scan_sharded" in out:
-        sh = out["scan_sharded"]
-        line += (f" sharded[{sh['devices']}]={sh['wall_s']}s "
-                 f"({sh['points_per_sec']} pts/s, "
-                 f"{sh['speedup_vs_event']}x event, "
-                 f"{sh['speedup_vs_scan']}x scan, "
-                 f"rows_match={sh['rows_match_scan']})")
+            f"rounds={rd['wall_s']}s ({rd['points_per_sec']} pts/s, "
+            f"{rd['speedup_vs_event']}x event) "
+            f"max_drift(scan)={out['max_drift']} "
+            f"rounds_contract_ok={out['rounds_contract_ok']}")
+    for key, base in (("scan_sharded", "scan"), ("rounds_sharded",
+                                                 "rounds")):
+        if key in out:
+            sh = out[key]
+            match = sh.get("rows_match_scan", sh.get("rows_match_rounds"))
+            line += (f" {key}[{sh['devices']}]={sh['wall_s']}s "
+                     f"({sh['points_per_sec']} pts/s, rows_match={match})")
     print(line)
     print(f"# -> {args.out}")
-    if args.check_fidelity is not None and out["max_drift"] > args.check_fidelity:
-        print(f"FIDELITY DRIFT {out['max_drift']} exceeds "
-              f"{args.check_fidelity}", file=sys.stderr)
-        return 1
-    return 0
+    rc = 0
+    if args.check_fidelity is not None:
+        if out["max_drift"] > args.check_fidelity:
+            print(f"FIDELITY DRIFT {out['max_drift']} exceeds "
+                  f"{args.check_fidelity}", file=sys.stderr)
+            rc = 1
+        if not out["rounds_contract_ok"]:
+            print(f"ROUNDS CONTRACT FAILED: {out['rounds_fidelity']} "
+                  f"donation_warnings={out['donation_warnings']}",
+                  file=sys.stderr)
+            rc = 1
+    if args.perf_gate is not None:
+        ratio = rd["points_per_sec"] / max(out["scan"]["points_per_sec"],
+                                           1e-9)
+        if ratio < args.perf_gate:
+            print(f"PERF GATE: rounds at {ratio:.2f}x scan points/sec, "
+                  f"below the {args.perf_gate}x gate", file=sys.stderr)
+            rc = 1
+    return rc
 
 
 def main() -> None:

@@ -8,16 +8,20 @@ PhoenixCloud and EC2+RightScale (Fig. 18) — through
 exact vectorized jnp fast path in every mode; ``--mode`` picks how the
 stateful PhoenixCloud policies run:
 
-  auto  (default) FB / FLB-NUB on the per-point event engine
-  scan  FB / FLB-NUB batched through one jitted lax.scan
-        (approximate: jobs ±2 %, node-hours ±15 %, trends exact)
-  event everything on the event engine (the cross-validation reference)
+  auto   (default) FB / FLB-NUB on the event-round engine — same as
+         rounds, with an event-engine fallback for points the fast
+         path rejects
+  rounds FB / FLB-NUB batched through the jump-to-next-event engine
+         (completed jobs exact, node-hours/peak within 5 %)
+  scan   FB / FLB-NUB batched through one fixed-dt jitted lax.scan
+         (approximate: jobs ±2 %, node-hours ±15 %, trends exact)
+  event  everything on the event engine (the cross-validation reference)
 
-``--devices N`` shards the scan path's (point × trace) lanes across N
-host devices (forcing N XLA CPU devices when needed) — the multi-core
+``--devices N`` shards the batched paths' point lanes across N host
+devices (forcing N XLA CPU devices when needed) — the multi-core
 backend of the sweep engine.
 
-Run:  PYTHONPATH=src python examples/sweep_capacity.py [--mode scan]
+Run:  PYTHONPATH=src python examples/sweep_capacity.py [--mode rounds]
       [--devices 2]
 """
 import argparse
@@ -30,15 +34,15 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--mode", default="auto",
                 help="execution path for the FB / FLB-NUB points")
 ap.add_argument("--devices", type=int, default=0,
-                help="shard the scan lanes across N host devices "
-                "(requires --mode scan)")
+                help="shard the batched-path lanes across N host devices "
+                "(requires a batched mode: auto, scan or rounds)")
 args = ap.parse_args()
 
 if args.devices >= 2:
-    if args.mode != "scan":
-        # Only the scan path consumes the devices option — anything else
-        # would silently run unsharded.
-        ap.error("--devices requires --mode scan")
+    if args.mode not in ("auto", "scan", "rounds"):
+        # Only the batched paths consume the devices option — anything
+        # else would silently run unsharded.
+        ap.error("--devices requires a batched mode (auto, scan, rounds)")
     from repro.hostdev import force_host_device_count
     force_host_device_count(args.devices)
 

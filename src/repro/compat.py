@@ -5,10 +5,19 @@
 up to ~0.4.x and graduates to ``jax.shard_map`` (kwarg renamed
 ``check_vma``) in newer releases. Import it from here so model and test
 code runs on both.
+
+``jit`` here additionally normalizes *buffer donation*: XLA only
+implements input-output aliasing on some backends, and donating on the
+others (plain CPU most notably) makes every jitted call emit a
+"donated buffers were not usable" warning. The shim keeps
+``donate_argnums`` on backends that honor it and silently drops it
+elsewhere, so callers can donate their large carry/lane buffers
+unconditionally.
 """
 
 from __future__ import annotations
 
+import functools
 from typing import List, Optional, Sequence, Union
 
 import jax
@@ -20,7 +29,56 @@ except AttributeError:
     from jax.experimental.shard_map import shard_map as _shard_map
     _CHECK_KWARG = "check_rep"
 
-__all__ = ["shard_map", "axis_size", "resolve_devices"]
+__all__ = ["shard_map", "axis_size", "resolve_devices", "jit",
+           "supports_donation"]
+
+# Backends with working input-output aliasing. XLA:CPU parses the
+# aliasing hint but does not consume it — every donated call would warn
+# and nothing would be saved — so donation is gated to these platforms.
+_DONATING_PLATFORMS = ("gpu", "tpu", "cuda", "rocm")
+
+
+def supports_donation(platform: Optional[str] = None) -> bool:
+    """True when ``donate_argnums`` buys in-place reuse on ``platform``
+    (default: the default jax backend) instead of a warning per call."""
+    if platform is None:
+        platform = jax.default_backend()
+    return platform.lower() in _DONATING_PLATFORMS
+
+
+def jit(fn=None, *, donate_argnums=(), platform: Optional[str] = None,
+        **kwargs):
+    """``jax.jit`` with ``donate_argnums`` dropped on backends that do
+    not implement buffer donation (see module docstring). All other
+    keyword arguments pass through; usable as a decorator or a call.
+
+    The backend probe is deferred to the first call: module-level
+    decoration must not initialize the XLA backend, or merely importing
+    a module would freeze the host device count before
+    ``XLA_FLAGS=--xla_force_host_platform_device_count`` (the
+    ``repro.hostdev`` flow) can take effect.
+
+    ``platform`` overrides the backend probe (tests use it to pin the
+    gate's behavior without a real accelerator).
+    """
+    if fn is None:
+        return lambda f: jit(f, donate_argnums=donate_argnums,
+                             platform=platform, **kwargs)
+    if not donate_argnums:
+        return jax.jit(fn, **kwargs)
+
+    jitted: List = []
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kw):
+        if not jitted:
+            jit_kwargs = dict(kwargs)
+            if supports_donation(platform):
+                jit_kwargs["donate_argnums"] = donate_argnums
+            jitted.append(jax.jit(fn, **jit_kwargs))
+        return jitted[0](*args, **kw)
+
+    return wrapper
 
 # The devices argument accepted across the repo's sharded entry points:
 # a device count, an explicit device sequence, or None (single-device).

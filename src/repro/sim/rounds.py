@@ -1,0 +1,638 @@
+"""Event-round fast path: jump-to-next-event steps for the stateful
+PhoenixCloud policies.
+
+The fixed-``dt`` scan (``repro.sim.scan``) advances every lane by the
+same substep whether or not anything happens in it, and rounds
+completions to the nearest substep. This module replaces the time grid
+with *event rounds*: each step of the jitted loop computes the next
+event horizon per lane —
+
+    ``b = min(next submit, earliest completion among running lanes,
+              next WS change the policy can react to,
+              next lease boundary L·(⌊t/L⌋+1))``
+
+— advances straight to it, and fires the policy tick only when the step
+lands on a lease boundary (the lease axis L stays *traced*, so Fig. 18
+sweeps it inside the batch). Completions happen at their exact times
+(``start + runtime``, no nearest-substep rounding) and every allocation
+interval integrates exactly, so the scan's 15 % fidelity contract
+collapses to the policy-approximation residue alone (first-fit pass
+convergence and FB kill tie-breaking): completed jobs match the event
+engine *exactly* and node-hours/peak stay within 5 % on the paper
+grids.
+
+What counts as an event (the step-count economics)
+--------------------------------------------------
+
+A naive event list (every submit, completion and WS change) is *denser*
+than the scan's substep grid on the paper traces — the World Cup demand
+profile alone changes ~2.8k times in two weeks. The engine therefore
+jumps over every event whose effect is computable without stopping:
+
+* **WS demand changes** never stop a lane. The WS share of the
+  allocation is policy-independent, so its node-hour integral and its
+  per-lease-window maxima are precomputed host-side per sweep point
+  (``∫min(ws, C)`` for FB, ``∫max(ws − lb_ws, 0)`` and per-tick-window
+  maxima for FLB-NUB's peak), and the loop samples the instantaneous
+  demand with one binary search when a round needs it (FB reclaim, the
+  FLB pool flow at ticks). Only FB demand *rises* remain stops — §5.1
+  rule 3 reclaims (and kills) the moment demand grows — which also
+  keeps the between-stops demand monotone falling, making the per-stop
+  peak probe exact.
+* **Submits** skip whenever they provably start on time: if the queue
+  is empty and the summed size of every submit in the horizon fits in
+  the currently free capacity (a conservative bound — completions
+  inside the horizon only add slack), each submitting lane starts
+  *retroactively* at its exact submit time. Contended submits fall back
+  to one round per event.
+* **Completions** stop a lane only while the queue is non-empty (a
+  finish can then start queued jobs); with an empty queue they fold
+  retroactively at the next round, at their exact times.
+
+What remains is one round per lease tick plus the contended stretches —
+on the paper grids ~3-6× fewer steps than the scan's substep count, and
+each round is cheaper (no per-substep WS profile, a smaller window).
+On demand traces finer than the scan's ``FLB_MIN_DT`` floor the gap
+widens by another order of magnitude.
+
+The queue/kill machinery is shared with the scan engine: the same
+fixed-size job window with status lanes, vectorized first-fit and §5.1
+size-class kill selection (``repro.sim.scan.fb_actions`` /
+``flb_actions``), with lanes carrying an absolute ``end_t`` instead of
+a decremented remaining time — what makes completions exact and FB
+kill-restarts trivially correct (a restart rewrites ``end_t``).
+
+Loop structure: an outer ``while_loop`` step compacts the window (one
+stacked lane gather — the only data-movement op, amortized) and admits
+fresh job-table rows as contiguous ``dynamic_slice`` reads; an inner
+unrolled block runs ``compact_every`` event rounds of pure elementwise/
+reduction work. Lanes that reach the horizon self-mask (``b = t``) and
+the outer loop exits once every lane is done.
+
+Tie order at one timestamp replays the event engine's kinds (WS demand
+→ lease tick → submit → finish) except for exact-float coincidences of
+a completion or a skipped submit with a tick, which fold before the
+tick's policy actions instead of around them — a measure-zero
+coincidence on real-valued traces.
+
+With ``devices`` set, the flattened (point × trace) lane axis shards
+across host devices exactly like the scan path (the shared
+``sharded_grid_map``); each lane runs the identical per-lane program,
+so sharded rows are bit-identical to single-device rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.core.jobs import Job
+from repro.core.profiles import step_points
+from repro.sim.scan import (FBGrid, FLBGrid, _prm_tree, _size_classes,
+                            fb_actions, flb_actions, pack_job_table,
+                            resolve_pack_dtype, sharded_grid_map,
+                            stable_compact)
+
+__all__ = [
+    "PackedEventWorkloads", "RoundsSpec", "pack_event_workloads",
+    "rounds_grids", "round_budget", "FB_ROUNDS_WINDOW",
+    "FLB_ROUNDS_WINDOW", "ROUNDS_FF_PASSES", "COMPACT_EVERY",
+]
+
+# Windows are sized to the measured unfinished-job backlog on the §6.2
+# traces (FB is capacity-bound — ≤ 158 unfinished at the Fig-13
+# capacities on SDSC BLUE; FLB-NUB leases elastically — ≤ 55) plus
+# slack: between compactions completed lanes linger and freshly
+# submitting jobs must already be admitted.
+FB_ROUNDS_WINDOW = 192
+FLB_ROUNDS_WINDOW = 96
+# One more first-fit pass than the scan default: with exact event times
+# a pass-convergence miss is a *start-time* error (the scan's analog is
+# a bounded one-substep delay), so spend one extra pass per round.
+ROUNDS_FF_PASSES = 3
+# Rounds between window compactions. Compaction is the one data-movement
+# op of the loop (a stacked lane gather); amortizing it every few rounds
+# keeps the per-round cost at reduction-dispatch level. The inner block
+# is unrolled, so this also bounds the compiled body size.
+COMPACT_EVERY = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundsSpec:
+    """Static (hashable) execution parameters of one policy's
+    event-round program: the measurement horizon, the safety cap on
+    rounds (the loop exits when every lane reaches the horizon — the
+    cap only stops a runaway lane, see :func:`round_budget`), the job
+    window, the first-fit passes per round and the compaction cadence."""
+
+    duration: float
+    max_rounds: int
+    window: int
+    ff_passes: int = ROUNDS_FF_PASSES
+    compact_every: int = COMPACT_EVERY
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedEventWorkloads:
+    """Fixed-size event arrays for W workloads and one policy's P sweep
+    points: the arrival-sorted job tables of the scan pack plus the WS
+    demand change points (value changes only, +inf sentinel padding)
+    and the host-precomputed WS fold tables (see the module docstring —
+    the loop never stops at a WS change, it reads these instead)."""
+
+    submit: jnp.ndarray       # (W, J + K) — padded past the table end
+    size: jnp.ndarray         # (W, J + K)
+    runtime: jnp.ndarray      # (W, J + K)
+    ws0: jnp.ndarray          # (W,) demand at t = 0
+    ws_adjusts: jnp.ndarray   # (W,) ledgered WS events (startup + changes)
+    rise_times: jnp.ndarray   # (W, NR) demand-rise times (FB stops), +inf
+    rise_vals: jnp.ndarray    # (W, NR) demand value after each rise
+    ws_integral: jnp.ndarray  # (W, P) ∫ policy's WS allocation share
+    ws_winmax: jnp.ndarray    # (W, P, NT) per-lease-window max of the
+    #                           policy's WS share (peak folding)
+    ws_at_tick: jnp.ndarray   # (W, P, NT) demand at each lease boundary
+    n_jobs: jnp.ndarray       # (W,) real (unpadded) job counts
+
+
+jax.tree_util.register_dataclass(
+    PackedEventWorkloads,
+    data_fields=["submit", "size", "runtime", "ws0", "ws_adjusts",
+                 "rise_times", "rise_vals", "ws_integral", "ws_winmax",
+                 "ws_at_tick", "n_jobs"],
+    meta_fields=[])
+
+
+# ------------------------------------------------------------------ packing
+
+def _ws_fold_tables(times: np.ndarray, values: np.ndarray, duration: float,
+                    policy: str, leases: np.ndarray, levels: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side WS fold tables for one workload across P sweep points.
+
+    Returns ``(integral, winmax, at_tick)``: the exact node-second
+    integral of the policy's WS allocation share (``min(ws, C)`` for
+    FB, ``max(ws − lb_ws, 0)`` for FLB-NUB), the maximum of that share
+    over every lease window ``[kL, (k+1)L)``, and the demand sampled at
+    every lease boundary. The loop folds peaks per lease window (the
+    policy-owned share is constant inside one) and reads tick-time
+    demand from ``at_tick`` — no stop at a demand change, no in-loop
+    binary search.
+    """
+    edges = np.minimum(np.append(times[1:], duration), duration)
+    widths = np.maximum(edges - np.minimum(times, duration), 0.0)
+    P = len(leases)
+    if policy == "fb":
+        share = np.minimum(values[None, :], levels[:, None])   # (P, NWS)
+    else:
+        share = np.maximum(values[None, :] - levels[:, None], 0.0)
+    integral = share @ widths
+    # One entry past the last full window: when the horizon is an exact
+    # lease multiple a tick fires AT the horizon and probes the
+    # degenerate window starting there — it must read the horizon-time
+    # demand, not zero padding.
+    nt = max(int(np.ceil(duration / leases.min())), 1) + 1
+    winmax = np.zeros((P, nt))
+    at_tick = np.zeros((P, nt))
+    for p in range(P):
+        n_win = max(int(np.ceil(duration / leases[p])), 1)
+        # Merge the demand change points with the window edges, so each
+        # merged cell lies in exactly one window and carries one share
+        # value; a grouped max per window then covers segments that
+        # span window boundaries.
+        win_edges = np.arange(n_win) * leases[p]
+        merged = np.union1d(times, win_edges)
+        merged = merged[merged < duration]
+        vals = share[p][np.searchsorted(times, merged, "right") - 1]
+        starts = np.searchsorted(merged, win_edges, "left")
+        winmax[p, :n_win] = np.maximum.reduceat(vals, starts)
+        at_tick[p, :n_win] = values[
+            np.searchsorted(times, win_edges, "right") - 1]
+        end_idx = np.searchsorted(times, n_win * leases[p], "right") - 1
+        winmax[p, n_win] = share[p][end_idx]
+        at_tick[p, n_win] = values[end_idx]
+    return integral, winmax, at_tick
+
+
+def pack_event_workloads(workloads: Sequence[Tuple[Sequence[Job],
+                                                   Sequence[Tuple[float,
+                                                                  int]]]],
+                         duration: float, window: int, policy: str,
+                         leases: Sequence[float], levels: Sequence[float],
+                         dtype: Optional[np.dtype] = None
+                         ) -> PackedEventWorkloads:
+    """Pack ``(jobs, ws_trace)`` workloads into event-round arrays for
+    one policy's sweep points.
+
+    ``levels`` is the per-point WS fold level — the capacity C for FB,
+    the WS lower bound for FLB-NUB (integers; the fold tables are exact
+    for the values given). WS change points collapse to actual value
+    changes within the horizon (the event engine ledgers nothing for a
+    no-op demand event); a trailing ``+inf`` sentinel keeps gathers in
+    range after the last real change.
+    """
+    dtype = resolve_pack_dtype(dtype)
+    submit, size, runtime, n_jobs = pack_job_table(workloads, window, dtype)
+    W = len(workloads)
+    leases = np.asarray(leases, np.float64)
+    levels = np.asarray(levels, np.float64)
+    rises: List[Tuple[np.ndarray, np.ndarray]] = []
+    integrals, winmaxes, at_ticks = [], [], []
+    ws0 = np.zeros(W, dtype)
+    ws_adjusts = np.zeros(W, dtype)
+    for w, (_, ws_trace) in enumerate(workloads):
+        times, values = step_points(ws_trace, duration)
+        keep = np.ones(len(times), bool)
+        keep[1:] = values[1:] != values[:-1]   # drop no-op change points
+        times, values = times[keep], values[keep]
+        ws0[w] = values[0]
+        ws_adjusts[w] = (len(times) - 1) + float(values[0] > 0)
+        up = values[1:] > values[:-1]
+        rises.append((times[1:][up], values[1:][up]))
+        integral, winmax, at_tick = _ws_fold_tables(
+            times, values, duration, policy, leases, levels)
+        integrals.append(integral)
+        winmaxes.append(winmax)
+        at_ticks.append(at_tick)
+    nr = max((len(r) for r, _ in rises), default=0) + 1   # +inf sentinel
+    rise_times = np.full((W, nr), np.inf, dtype)
+    rise_vals = np.zeros((W, nr), dtype)
+    for w, (r_t, r_v) in enumerate(rises):
+        rise_times[w, :len(r_t)] = r_t
+        rise_vals[w, :len(r_v)] = r_v
+    return PackedEventWorkloads(
+        submit=jnp.asarray(submit), size=jnp.asarray(size),
+        runtime=jnp.asarray(runtime),
+        ws0=jnp.asarray(ws0), ws_adjusts=jnp.asarray(ws_adjusts),
+        rise_times=jnp.asarray(rise_times),
+        rise_vals=jnp.asarray(rise_vals),
+        ws_integral=jnp.asarray(np.stack(integrals).astype(dtype)),
+        ws_winmax=jnp.asarray(np.stack(winmaxes).astype(dtype)),
+        ws_at_tick=jnp.asarray(np.stack(at_ticks).astype(dtype)),
+        n_jobs=jnp.asarray(n_jobs))
+
+
+def round_budget(max_jobs: int, n_ws: int, duration: float,
+                 min_lease: float) -> int:
+    """Safety cap on rounds per lane: every submit, one completion per
+    job plus generous kill-restart slack (FB restarts re-enter the
+    completion stream), every demand rise and every lease tick of the
+    *shortest* lease in the grid. The loop exits as soon as every lane
+    reaches the horizon, so the cap is free unless a lane runs away; a
+    lane that exhausts it reports ``truncated`` and the sweep layer
+    warns.
+    """
+    ticks = int(np.ceil(duration / max(min_lease, 1.0)))
+    return int(n_ws + 4 * max_jobs + ticks + 64)
+
+
+# ------------------------------------------------------------- the rounds core
+
+def _simulate_rounds(policy: str, prm: Dict, pk: PackedEventWorkloads,
+                     spec: RoundsSpec) -> Dict[str, jnp.ndarray]:
+    """One (point, workload) lane; vmapped over both axes by the caller.
+
+    ``pk`` holds a single workload's rows; ``prm`` one sweep point's
+    scalars plus its index ``p_idx`` into the packed WS fold tables;
+    ``policy`` is static ("fb" | "flb_nub").
+    """
+    duration = spec.duration
+    ff_passes = spec.ff_passes
+    K = spec.window
+    R = spec.compact_every
+    tr_submit, tr_size, tr_runtime = pk.submit, pk.size, pk.runtime
+    rise_times, rise_vals, ws0 = pk.rise_times, pk.rise_vals, pk.ws0
+    Jp = tr_submit.shape[0]        # includes >= K pad rows (submit = +inf)
+    f = tr_submit.dtype
+    inf = jnp.asarray(jnp.inf, f)
+    zero = jnp.zeros((), f)
+    one = jnp.ones((), f)
+    dur = jnp.asarray(duration, f)
+    lanes = jnp.arange(K)
+    L = prm["lease"].astype(f)
+    p_idx = prm["p_idx"]
+    ws_integral = pk.ws_integral[p_idx]      # exact ∫ WS share
+    ws_winmax = pk.ws_winmax[p_idx]          # (NT,) WS-share window max
+    ws_at_tick = pk.ws_at_tick[p_idx]        # (NT,) demand at boundaries
+    NT = ws_winmax.shape[0]
+    if policy == "fb":
+        C = prm["capacity"].astype(f)
+        owned0 = C - jnp.minimum(ws0, C)     # startup: all idle → PBJ (§5.1)
+        pool0 = zero
+    else:
+        B = prm["B"].astype(f)
+        lb_ws = prm["lb_ws"].astype(f)
+        U, V, G = (prm[k].astype(f) for k in ("U", "V", "G"))
+        owned0 = jnp.maximum(B - lb_ws, 1.0)  # startup lower bound (§5.2)
+        pool0 = owned0
+
+    def actions(owned, pool_pbj, run, used, queued, wsv, is_tick, win,
+                w_sz, acc):
+        """The shared §5 policy step at one instant (see scan.py). The
+        integrand it returns covers only the policy-owned share — the
+        WS share integrates host-side (``ws_integral``) — and peaks
+        fold per lease window: the policy share is constant inside one
+        (FB reclaims only at demand-rise stops, which ratchet it down
+        monotonically after the window's grant; FLB adjusts only at
+        ticks), so combining it with the precomputed WS-share window
+        max is exact without stopping at demand changes."""
+        if policy == "fb":
+            owned, run, starts, killed, alloc, pbj_ev = fb_actions(
+                C, owned, run, used, queued, wsv, w_sz,
+                *_size_classes(w_sz), is_tick, ff_passes)
+            acc["kills"] += jnp.sum(killed)
+            # Window peak: owned is maximal right after the window's
+            # grant, and the §5.1 ratchet owned(τ) = C − runmax(ws)
+            # makes the in-window alloc max exactly min(owned + M, C).
+            peak_cand = jnp.minimum(owned + ws_winmax[win], C)
+            integrand = owned
+        else:
+            owned, pool_pbj, run, starts, alloc, pbj_ev = flb_actions(
+                B, lb_ws, U, V, G, owned, pool_pbj, run, used, queued,
+                wsv, w_sz, is_tick, ff_passes)
+            leased = B + jnp.maximum(owned - pool_pbj, 0.0)
+            peak_cand = leased + ws_winmax[win]
+            integrand = leased
+        acc["peak"] = jnp.maximum(acc["peak"],
+                                  jnp.where(is_tick, peak_cand, -jnp.inf))
+        acc["pbj_adjusts"] += pbj_ev
+        acc["adjusts"] += pbj_ev
+        return owned, pool_pbj, run, starts, integrand, acc
+
+    def round_body(carry):
+        (t, owned, pool_pbj, used, has_queue, wsv, alloc_prev, rise_i,
+         row_sub, w_sub, w_sz, w_rt, run, done, start_t, end_t, acc) = carry
+        active = t < duration
+        # --- the next event horizon. Every candidate is strictly > t,
+        # so the loop always progresses; a finished lane pins b = t and
+        # becomes a no-op. Completions bound the horizon only while the
+        # queue is non-empty (they can then start queued work);
+        # otherwise they fold retroactively below, at exact times.
+        mins = jnp.min(jnp.stack([jnp.where(w_sub > t, w_sub, inf),
+                                  jnp.where(run, end_t, inf)]),
+                       axis=-1)                      # one packed reduction
+        next_sub = jnp.minimum(mins[0],
+                               jnp.where(row_sub > t, row_sub, inf))
+        k_next = jnp.floor(t / L) + 1.0
+        t_tick = k_next * L
+        b0 = jnp.minimum(jnp.minimum(jnp.where(has_queue, mins[1], inf),
+                                     t_tick),
+                         jnp.minimum(jnp.where(row_sub > t, row_sub, inf),
+                                     dur))
+        if policy == "fb":
+            b0 = jnp.minimum(b0, rise_times[rise_i])
+        # --- submit skipping. Empty queue: if every submit in (t, b0]
+        # fits the currently-free capacity in aggregate (free only
+        # grows inside the horizon; the row_sub cap keeps every such
+        # submit inside the window), each starts exactly on time —
+        # retroactively, below. Non-empty queue: free is *constant*
+        # inside the horizon (starts and completions are stops then),
+        # so when even the smallest arriving job exceeds it, arrivals
+        # can only enqueue — which the derived queue encoding does with
+        # no action at all. Otherwise stop at the next submit.
+        fresh = (w_sub > t) & (w_sub <= b0)
+        sum_new = jnp.sum(jnp.where(fresh, w_sz, zero))
+        min_new = jnp.min(jnp.where(fresh, w_sz, inf))
+        free = owned - used
+        skip_ok = ~has_queue & (sum_new <= free)
+        enqueue_only = has_queue & (min_new > free)
+        b = jnp.where(skip_ok | enqueue_only, b0,
+                      jnp.minimum(b0, next_sub))
+        b = jnp.where(active, b, t)
+        # --- exact interval integration: the policy-owned allocation is
+        # constant on (t, b] — it only ever changes at rounds.
+        acc["node_seconds"] += alloc_prev * jnp.maximum(b - t, 0.0)
+        # --- retroactive starts at exact submit times.
+        starting = (w_sub > t) & (w_sub <= b) & ~run & ~done & skip_ok
+        run = run | starting
+        start_t = jnp.where(starting, w_sub, start_t)
+        end_t = jnp.where(starting, w_sub + w_rt, end_t)
+        # --- exact completions (including flash jobs that started and
+        # finished inside this very horizon).
+        completing = run & (end_t <= b)
+        run = run & ~completing
+        done = done | completing
+        cmp_f = completing.astype(f)
+        folds = jnp.sum(jnp.stack([cmp_f, cmp_f * (end_t - w_sub),
+                                   cmp_f * (end_t - start_t),
+                                   jnp.where(run, w_sz, zero)]),
+                        axis=-1)                     # one packed reduction
+        acc["completed"] += folds[0]
+        acc["turn_sum"] += folds[1]
+        acc["exec_sum"] += folds[2]
+        used = folds[3]
+        # --- policy actions at b. The tick fires only on a lease
+        # boundary and reads the boundary-time demand from the host
+        # table; between stops the carried demand only matters to FB,
+        # whose reclaim level it tracks exactly (rises are FB stops).
+        queued = (w_sub <= b) & ~run & ~done
+        is_tick = t_tick <= b
+        win = jnp.minimum(k_next, NT - 1.0).astype(jnp.int32)
+        if policy == "fb":
+            rised = rise_times[rise_i] <= b
+            wsv = jnp.where(rised, rise_vals[rise_i], wsv)
+            rise_i = rise_i + rised.astype(jnp.int32)
+        wsv = jnp.where(is_tick, ws_at_tick[win], wsv)
+        owned, pool_pbj, run, starts, integrand, acc = actions(
+            owned, pool_pbj, run, used, queued, wsv, is_tick, win, w_sz,
+            acc)
+        start_t = jnp.where(starts, b, start_t)
+        end_t = jnp.where(starts, b + w_rt, end_t)
+        # Recompute the queue and usage from the POST-action lane state:
+        # fb_actions may have killed running lanes, which re-queue
+        # (run cleared, not done) and release their nodes — deriving
+        # from the pre-action masks would hide a killed job from the
+        # next round's completion horizon and overstate ``used`` in its
+        # skip/enqueue tests.
+        post = jnp.sum(jnp.stack([
+            jnp.where((w_sub <= b) & ~run & ~done, one, zero),
+            jnp.where(run, w_sz, zero)]),
+            axis=-1)                                 # one packed reduction
+        has_queue = post[0] > 0
+        used = post[1]
+        acc["window_overflow"] += (active & (row_sub <= b)).astype(f)
+        acc["rounds"] += active.astype(f)
+        return (b, owned, pool_pbj, used, has_queue, wsv, integrand,
+                rise_i, row_sub, w_sub, w_sz, w_rt, run, done, start_t,
+                end_t, acc)
+
+    def cond(carry):
+        i, t = carry[0], carry[1]
+        return (i < outer_max) & (t < duration)
+
+    def chunk(carry):
+        (i, t, owned, pool_pbj, used, has_queue, wsv, alloc_prev, rise_i,
+         next_row, w_sub, w_sz, w_rt, run, done, start_t, end_t,
+         acc) = carry
+        # --- compact done lanes out of the window (stacked gather) and
+        # admit the next table rows into the freed tail as contiguous
+        # dynamic-slice reads. When the table is exhausted the slice
+        # start clamps into the +inf padding block, so admitted lanes
+        # read pad rows — never a duplicate of a live row.
+        (run_c, start_t, end_t, w_sub, w_sz, w_rt), n_keep = \
+            stable_compact(~done, [run, start_t, end_t, w_sub, w_sz, w_rt],
+                           [False, zero, zero, inf, zero, zero])
+        run = run_c
+        done = jnp.zeros(K, bool)
+        adm_start = next_row - n_keep
+        tail = lanes >= n_keep
+        w_sub = jnp.where(tail, jax.lax.dynamic_slice(tr_submit,
+                                                      (adm_start,), (K,)),
+                          w_sub)
+        w_sz = jnp.where(tail, jax.lax.dynamic_slice(tr_size,
+                                                     (adm_start,), (K,)),
+                         w_sz)
+        w_rt = jnp.where(tail, jax.lax.dynamic_slice(tr_runtime,
+                                                     (adm_start,), (K,)),
+                         w_rt)
+        next_row = jnp.minimum(next_row + (K - n_keep),
+                               Jp).astype(jnp.int32)
+        row_sub = tr_submit[jnp.minimum(next_row, Jp - 1)]
+        inner = (t, owned, pool_pbj, used, has_queue, wsv, alloc_prev,
+                 rise_i, row_sub, w_sub, w_sz, w_rt, run, done, start_t,
+                 end_t, acc)
+        for _ in range(R):      # unrolled: XLA fuses across the rounds
+            inner = round_body(inner)
+        (t, owned, pool_pbj, used, has_queue, wsv, alloc_prev, rise_i,
+         row_sub, w_sub, w_sz, w_rt, run, done, start_t, end_t,
+         acc) = inner
+        return (i + 1, t, owned, pool_pbj, used, has_queue, wsv,
+                alloc_prev, rise_i, next_row, w_sub, w_sz, w_rt, run,
+                done, start_t, end_t, acc)
+
+    # ---- startup round at t = 0: the engine's startup() allocation
+    # followed by the t = 0 submit events (no tick fires at 0), plus
+    # the first lease window's peak probe (the tick-gated probe in
+    # actions() starts at window 1).
+    acc = {k: zero for k in
+           ("completed", "turn_sum", "exec_sum", "kills", "node_seconds",
+            "peak", "pbj_adjusts", "adjusts", "window_overflow", "rounds")}
+    w_sub = tr_submit[:K]
+    w_sz = tr_size[:K]
+    w_rt = tr_runtime[:K]
+    queued0 = w_sub <= 0.0
+    owned, pool_pbj, run, starts0, alloc0, acc = actions(
+        owned0, pool0, jnp.zeros(K, bool), zero, queued0, ws0,
+        jnp.asarray(False), jnp.asarray(0, jnp.int32), w_sz, acc)
+    if policy == "fb":
+        acc["peak"] = jnp.maximum(acc["peak"],
+                                  jnp.minimum(owned + ws_winmax[0], C))
+    else:
+        acc["peak"] = jnp.maximum(
+            acc["peak"], B + jnp.maximum(owned - pool_pbj, 0.0)
+            + ws_winmax[0])
+    start_t = jnp.zeros(K, f)
+    end_t = jnp.where(starts0, w_rt, jnp.zeros(K, f))
+    used0 = jnp.sum(jnp.where(run, w_sz, zero))
+    has_queue0 = jnp.sum(jnp.where(queued0 & ~run, 1.0, 0.0)) > 0
+
+    outer_max = -(-spec.max_rounds // R)
+    carry0 = (jnp.asarray(0, jnp.int32), zero, owned, pool_pbj, used0,
+              has_queue0, ws0, alloc0, jnp.asarray(0, jnp.int32),
+              jnp.asarray(K, jnp.int32), w_sub, w_sz, w_rt, run,
+              jnp.zeros(K, bool), start_t, end_t, acc)
+    carry = jax.lax.while_loop(cond, chunk, carry0)
+    t_end, acc = carry[1], carry[-1]
+    n_done = jnp.maximum(acc["completed"], 1.0)
+    return {
+        "completed_jobs": acc["completed"],
+        "avg_turnaround": acc["turn_sum"] / n_done,
+        "avg_execution": acc["exec_sum"] / n_done,
+        "node_hours": (acc["node_seconds"] + ws_integral) / 3600.0,
+        "peak_nodes": acc["peak"],
+        "adjust_events": acc["adjusts"] + pk.ws_adjusts,
+        "pbj_adjust_events": acc["pbj_adjusts"],
+        "kills": acc["kills"],
+        "window_overflow": acc["window_overflow"],
+        "rounds": acc["rounds"],
+        "truncated": (t_end < duration).astype(f),
+    }
+
+
+def _rounds_prm_tree(policy: str, grid) -> Dict[str, jnp.ndarray]:
+    """The scan parameter tree plus each point's index into the packed
+    WS fold tables (``ws_integral`` / ``ws_winmax``)."""
+    prm = dict(_prm_tree(policy, grid))
+    prm["p_idx"] = jnp.arange(int(grid.lease.shape[0]), dtype=jnp.int32)
+    return prm
+
+
+@functools.lru_cache(maxsize=None)
+def _rounds_lane(policy: str, spec: RoundsSpec):
+    """Per-lane event-round program as a stable ``(prm, packed_row)``
+    closure — the cache keys the jit caches of the batched runners."""
+    def lane(prm, pk: PackedEventWorkloads):
+        return _simulate_rounds(policy, prm, pk, spec)
+    return lane
+
+
+@functools.partial(compat.jit, static_argnames=("fb_spec", "flb_spec"),
+                   donate_argnums=(2, 3))
+def _rounds_grids_single(fb: Optional[FBGrid], flb: Optional[FLBGrid],
+                         fb_packed: Optional[PackedEventWorkloads],
+                         flb_packed: Optional[PackedEventWorkloads], *,
+                         fb_spec: Optional[RoundsSpec] = None,
+                         flb_spec: Optional[RoundsSpec] = None
+                         ) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Single-device execution: the (trace, point) grid as nested vmaps,
+    with the packed event buffers donated where the backend supports it
+    (``repro.compat.jit``) — callers repack per invocation."""
+    def run(policy, prm_tree, packed, spec):
+        lane = _rounds_lane(policy, spec)
+        over_points = jax.vmap(lane, in_axes=(0, None))
+        over_traces = jax.vmap(over_points, in_axes=(None, 0))
+        return over_traces(prm_tree, packed)
+
+    out: Dict[str, Dict[str, jnp.ndarray]] = {}
+    if fb_spec is not None:
+        out["fb"] = run("fb", _rounds_prm_tree("fb", fb), fb_packed,
+                        fb_spec)
+    if flb_spec is not None:
+        out["flb_nub"] = run("flb_nub", _rounds_prm_tree("flb_nub", flb),
+                             flb_packed, flb_spec)
+    return out
+
+
+def rounds_grids(fb: Optional[FBGrid], flb: Optional[FLBGrid],
+                 fb_packed: Optional[PackedEventWorkloads],
+                 flb_packed: Optional[PackedEventWorkloads], *,
+                 fb_spec: Optional[RoundsSpec] = None,
+                 flb_spec: Optional[RoundsSpec] = None,
+                 devices: compat.Devices = None
+                 ) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Evaluate FB and FLB-NUB sweep grids through the event-round
+    engine. Returns ``{"fb": metrics, "flb_nub": metrics}`` with
+    ``(W, P_policy)`` metric arrays, like :func:`repro.sim.scan.
+    scan_grids`; a policy is skipped when its spec is ``None``.
+
+    ``devices`` selects the backend exactly as for the scan engine:
+    ``None`` / one device runs the nested-vmap program, two or more
+    shard the flattened (trace × point) lanes via the shared
+    ``sharded_grid_map`` — bit-identical rows either way, since every
+    lane runs the identical per-lane program. On backends with buffer
+    donation (GPU/TPU — ``repro.compat.jit``) the packed event buffers
+    are DONATED: re-pack per call rather than reusing one
+    ``PackedEventWorkloads`` across calls (on CPU donation is dropped
+    and reuse is safe).
+    """
+    devs = compat.resolve_devices(devices)
+    if devs is None:
+        return _rounds_grids_single(fb, flb, fb_packed, flb_packed,
+                                    fb_spec=fb_spec, flb_spec=flb_spec)
+    out: Dict[str, Dict[str, jnp.ndarray]] = {}
+    if fb_spec is not None:
+        out["fb"] = sharded_grid_map(
+            _rounds_lane("fb", fb_spec), _rounds_prm_tree("fb", fb),
+            fb_packed, int(fb_packed.submit.shape[0]),
+            int(fb.lease.shape[0]), devs)
+    if flb_spec is not None:
+        out["flb_nub"] = sharded_grid_map(
+            _rounds_lane("flb_nub", flb_spec),
+            _rounds_prm_tree("flb_nub", flb), flb_packed,
+            int(flb_packed.submit.shape[0]), int(flb.lease.shape[0]), devs)
+    return out

@@ -98,13 +98,19 @@ jax.tree_util.register_dataclass(
 
 __all__ = [
     "FBGrid", "FLBGrid", "PackedWorkloads", "ScanSpec", "pack_workloads",
-    "scan_grids", "pick_dt", "DEFAULT_WINDOW", "DEFAULT_SUBSTEPS",
-    "DEFAULT_FF_PASSES", "FB_DT", "FLB_DT", "FLB_MIN_DT",
+    "pack_job_table", "resolve_pack_dtype", "scan_grids", "pick_dt",
+    "fb_actions", "flb_actions", "compact_window", "sharded_grid_map",
+    "DEFAULT_WINDOW", "DEFAULT_SUBSTEPS", "DEFAULT_FF_PASSES",
+    "FB_DT", "FLB_DT", "FLB_MIN_DT",
 ]
 
 DEFAULT_WINDOW = 192       # job-table lanes carried through the scan
-FB_WINDOW = 160            # FB backlog is capacity-bound (≤ ~115 unfinished
-#                            jobs on the §6.2 traces at the Fig-13 capacities)
+FB_WINDOW = 192            # FB backlog is capacity-bound (≤ 158 unfinished
+#                            jobs on the §6.2 traces at the Fig-13
+#                            capacities — SDSC BLUE at C=128) and the
+#                            window additionally buffers a whole chunk of
+#                            arrivals; 160 overflowed there, which the
+#                            window_overflow warning now surfaces
 FLB_WINDOW = 128           # FLB-NUB leases elastically, so its backlog is
 #                            small; the window mostly buffers fresh arrivals
 DEFAULT_SUBSTEPS = 12      # substeps per base lease (dt = base_lease / 12)
@@ -184,6 +190,47 @@ for _cls, _fields in ((FBGrid, ["capacity", "lease"]),
 
 # ------------------------------------------------------------------ packing
 
+def resolve_pack_dtype(dtype: Optional[np.dtype]) -> np.dtype:
+    """Default the packing dtype to the active jax x64 setting, like
+    :func:`repro.core.jaxsim.pack_trace`; reject a float64 request that
+    jnp.asarray would silently downcast."""
+    if dtype is None:
+        return np.float64 if jax.config.jax_enable_x64 else np.float32
+    if np.dtype(dtype) == np.float64 and not jax.config.jax_enable_x64:
+        raise ValueError(
+            "dtype=float64 requested with jax x64 disabled — jnp.asarray "
+            "would silently downcast to float32; wrap the call in "
+            "jax.experimental.enable_x64()")
+    return np.dtype(dtype)
+
+
+def pack_job_table(workloads: Sequence[Tuple[Sequence[Job],
+                                             Sequence[Tuple[float, int]]]],
+                   window: int, dtype: np.dtype
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                              np.ndarray]:
+    """Arrival-sorted job tables padded to a common length plus a full
+    window of trailing padding rows (``submit = +inf``, size 0) so the
+    window can slide past the table end. Shared by the fixed-dt scan
+    pack and the event-round pack (``repro.sim.rounds``). Returns
+    ``(submit, size, runtime, n_jobs)`` as numpy arrays of shape
+    ``(W, max_jobs + window)`` / ``(W,)``.
+    """
+    max_jobs = max(len(jobs) for jobs, _ in workloads)
+    J = max_jobs + window                      # window can slide past the end
+    submit = np.full((len(workloads), J), np.inf, dtype)
+    size = np.zeros((len(workloads), J), dtype)
+    runtime = np.zeros((len(workloads), J), dtype)
+    n_jobs = np.zeros(len(workloads), np.int32)
+    for w, (jobs, _) in enumerate(workloads):
+        order = sorted(jobs, key=lambda j: j.submit)
+        n_jobs[w] = len(order)
+        submit[w, :len(order)] = [j.submit for j in order]
+        size[w, :len(order)] = [j.size for j in order]
+        runtime[w, :len(order)] = [j.runtime for j in order]
+    return submit, size, runtime, n_jobs
+
+
 def pack_workloads(workloads: Sequence[Tuple[Sequence[Job],
                                              Sequence[Tuple[float, int]]]],
                    duration: float, dt: float,
@@ -198,37 +245,21 @@ def pack_workloads(workloads: Sequence[Tuple[Sequence[Job],
     the overhang is masked out). ``dtype`` defaults to the active jax
     x64 setting, like :func:`repro.core.jaxsim.pack_trace`.
     """
-    if dtype is None:
-        dtype = np.float64 if jax.config.jax_enable_x64 else np.float32
-    elif np.dtype(dtype) == np.float64 and not jax.config.jax_enable_x64:
-        raise ValueError(
-            "dtype=float64 requested with jax x64 disabled — jnp.asarray "
-            "would silently downcast to float32; wrap the call in "
-            "jax.experimental.enable_x64()")
+    dtype = resolve_pack_dtype(dtype)
     n_steps = int(np.ceil(duration / dt))
     n_chunks = -(-n_steps // chunk_len)
     s_pad = n_chunks * chunk_len
-    max_jobs = max(len(jobs) for jobs, _ in workloads)
-    J = max_jobs + window                      # window can slide past the end
-    submit = np.full((len(workloads), J), np.inf, dtype)
-    size = np.zeros((len(workloads), J), dtype)
-    runtime = np.zeros((len(workloads), J), dtype)
+    submit, size, runtime, n_jobs = pack_job_table(workloads, window, dtype)
     ws = np.zeros((len(workloads), s_pad), dtype)
     ws0 = np.zeros(len(workloads), dtype)
     hi_chunk = np.zeros((len(workloads), n_chunks), np.int32)
-    n_jobs = np.zeros(len(workloads), np.int32)
     for w, (jobs, ws_trace) in enumerate(workloads):
-        order = sorted(jobs, key=lambda j: j.submit)
-        n_jobs[w] = len(order)
-        submit[w, :len(order)] = [j.submit for j in order]
-        size[w, :len(order)] = [j.size for j in order]
-        runtime[w, :len(order)] = [j.runtime for j in order]
         times, values = step_points(ws_trace, duration)
         prof = sample_steps(times, values, np.arange(1, n_steps + 1) * dt)
         ws[w, :n_steps] = prof.astype(dtype)
         ws0[w] = values[0]
         chunk_end_t = (np.arange(1, n_chunks + 1) * chunk_len) * dt
-        hi_chunk[w] = np.searchsorted(submit[w, :len(order)], chunk_end_t,
+        hi_chunk[w] = np.searchsorted(submit[w, :n_jobs[w]], chunk_end_t,
                                       side="right")
     ws_changed = np.zeros(ws.shape, bool)
     ws_changed[:, 1:] = ws[:, 1:] != ws[:, :-1]
@@ -263,19 +294,23 @@ def _first_fit(free, queued, size, passes: int):
 
 def _size_classes(size):
     """Power-of-two size classes encoding the §5.1 kill priority (small
-    first). Returns ``(cls, onehot)``; hoisted to once per chunk."""
+    first). Returns ``(cls, class_masks)`` where ``class_masks`` is the
+    ``(_KILL_CLASSES, K)`` membership mask — the per-class sums reduce
+    over a masked stack, which XLA:CPU executes an order of magnitude
+    faster inside a loop body than the equivalent (K, C) matmul."""
     cls = jnp.clip(jnp.ceil(jnp.log2(jnp.maximum(size, 1.0))),
                    0, _KILL_CLASSES - 1).astype(jnp.int32)
-    onehot = (cls[:, None] == jnp.arange(_KILL_CLASSES)[None, :]
-              ).astype(size.dtype)
-    return cls, onehot
+    class_masks = cls[None, :] == jnp.arange(_KILL_CLASSES)[:, None]
+    return cls, class_masks
 
 
-def _kill_selection(running, size, cls, onehot, kill_need):
+def _kill_selection(running, size, cls, class_masks, kill_need):
     """§5.1 rule 2 kill set: smallest size class first, newest-arrival
     first inside the threshold class, until ``kill_need`` nodes free."""
     run_sz = jnp.where(running, size, jnp.zeros_like(size))
-    class_sum = run_sz @ onehot                             # (_KILL_CLASSES,)
+    class_sum = jnp.sum(jnp.where(class_masks, run_sz[None, :],
+                                  jnp.zeros_like(size)[None, :]),
+                        axis=-1)                            # (_KILL_CLASSES,)
     below = jnp.concatenate([jnp.zeros(1, size.dtype),
                              jnp.cumsum(class_sum)[:-1]])  # freed below class c
     # Threshold class: first class whose cumulative sum covers the need.
@@ -291,6 +326,134 @@ def _kill_selection(running, size, cls, onehot, kill_need):
     killed = jnp.where(kill_need > 0, kill_all | kill_thr,
                        jnp.zeros_like(running))
     return killed
+
+
+# ------------------------------------------------ shared policy-step helpers
+#
+# One instant of each policy's §5 rules, expressed over the window lanes.
+# Both time discretizations drive these: the fixed-dt substep below feeds
+# them its substep state, and the event-round engine (repro.sim.rounds)
+# feeds them exact event times. Runtime bookkeeping (remaining-time vs
+# absolute end-time) stays with the caller, which applies ``starts`` /
+# ``killed`` to its own encoding.
+
+def fb_actions(C, owned, run, used, queued, wsv, w_sz, w_cls, w_cls_masks,
+               is_tick, ff_passes: int):
+    """§5.1 rules 2–4 at one instant: WS reclaim (killing smallest-first
+    when idle nodes don't cover the demand rise), the on-tick grant of
+    all idle resources to the PBJ TRE, and the arrival-order first-fit.
+
+    Returns ``(owned, run, starts, killed, alloc, pbj_ev)``; ``run`` in
+    the result excludes ``killed`` and includes ``starts``.
+    """
+    ws_t = jnp.minimum(wsv, C)
+    need = jnp.maximum(owned - (C - ws_t), 0.0)
+    free = owned - used
+    kill_need = jnp.minimum(jnp.maximum(need - free, 0.0), used)
+    killed = _kill_selection(run, w_sz, w_cls, w_cls_masks, kill_need)
+    run = run & ~killed          # killed lanes re-queue derived
+    used = used - jnp.sum(jnp.where(killed, w_sz, jnp.zeros_like(w_sz)))
+    owned = owned - need
+    idle = jnp.maximum(C - ws_t - owned, 0.0)
+    grant = jnp.where(is_tick, idle, 0.0)
+    owned = owned + grant
+    f = w_sz.dtype
+    pbj_ev = (grant > 0).astype(f) + (need > 0).astype(f)
+    alloc = owned + ws_t
+    free = owned - used
+    _, starts = _first_fit(free, queued, w_sz, ff_passes)
+    run = run | starts
+    return owned, run, starts, killed, alloc, pbj_ev
+
+
+def flb_actions(B, lb_ws, U, V, G, owned, pool_pbj, run, used, queued,
+                wsv, w_sz, is_tick, ff_passes: int):
+    """§5.2 rules 2–4 at one instant, in the event engine's tick order:
+    pool grant → first-fit → U/V/G adjust on *post-start* demand and
+    free → second first-fit on the request grant (evaluating the rules
+    on pre-start state lets one tick absorb a whole submit burst as a
+    single DR1 request — the long-lease peak overshoot fixed in PR 3).
+
+    Returns ``(owned, pool_pbj, run, starts, alloc, pbj_ev)`` where
+    ``starts`` is the union of both first-fit passes (same instant, so
+    the caller's start-time bookkeeping is identical for both).
+    """
+    pool_ws = jnp.minimum(wsv, lb_ws)
+    pool_idle = jnp.maximum(B - pool_ws - pool_pbj, 0.0)
+    grant = jnp.where(is_tick, pool_idle, 0.0)
+    owned = owned + grant
+    pool_pbj = pool_pbj + grant
+    free = owned - used
+    _, starts = _first_fit(free, queued, w_sz, ff_passes)
+    run = run | starts
+    queued = queued & ~starts
+    used = used + jnp.sum(jnp.where(starts, w_sz, jnp.zeros_like(w_sz)))
+    demand = jnp.sum(jnp.where(queued, w_sz, jnp.zeros_like(w_sz)))
+    ratio = jnp.where(owned > 0, demand / jnp.maximum(owned, 1.0),
+                      jnp.where(demand > 0, jnp.inf, 0.0))
+    biggest = jnp.max(jnp.where(queued, w_sz, jnp.zeros_like(w_sz)))
+    free = owned - used
+    dr1 = jnp.maximum(demand - owned, 0.0)
+    dr2 = jnp.maximum(biggest - free, 0.0)
+    req = jnp.where(is_tick & (ratio > U), dr1,
+                    jnp.where(is_tick & (biggest > owned), dr2, 0.0))
+    rss = jnp.where(is_tick & (ratio < V) & (req == 0.0),
+                    jnp.floor(G * jnp.maximum(free, 0.0)), 0.0)
+    owned = owned + req - rss
+    pool_pbj = jnp.minimum(pool_pbj, owned)       # leased released first
+    f = w_sz.dtype
+    pbj_ev = (req > 0).astype(f) + (rss > 0).astype(f)
+    alloc = B + jnp.maximum(owned - pool_pbj, 0.0) \
+        + jnp.maximum(wsv - lb_ws, 0.0)
+    free = owned - used
+    _, starts2 = _first_fit(free, queued, w_sz, ff_passes)
+    run = run | starts2
+    return owned, pool_pbj, run, starts | starts2, alloc, pbj_ev
+
+
+def stable_compact(keep, arrays, fills):
+    """Stable partition: kept lanes move to the head in lane order, the
+    tail reads ``fills``. One stacked *gather* moves every array at once
+    — XLA:CPU runs the equivalent scatter an order of magnitude slower
+    inside a loop body, and this compaction sits on the hot path of the
+    event-round engine (every few rounds) as well as the scan's chunk
+    boundary. Arrays are cast through the float dtype of the first
+    array (lane payloads are flags, times and small ints — all exact in
+    it). Returns ``(compacted_arrays, n_keep)``.
+    """
+    K = keep.shape[0]
+    f = next((a.dtype for a in arrays if a.dtype.kind == "f"),
+             arrays[0].dtype)
+    cs = jnp.cumsum(keep)
+    n_keep = cs[-1]
+    # src[i] = index of the (i+1)-th kept lane (searchsorted over the
+    # monotone keep-prefix), valid for lanes < n_keep.
+    src = jnp.minimum(jnp.searchsorted(cs, jnp.arange(1, K + 1)), K - 1)
+    valid = jnp.arange(K) < n_keep
+    stacked = jnp.stack([a.astype(f) for a in arrays])
+    moved = stacked[:, src]
+    fill_col = jnp.stack([jnp.asarray(fill, f).reshape(())
+                          for fill in fills])[:, None]
+    out = jnp.where(valid[None, :], moved, fill_col)
+    return [out[i].astype(a.dtype) for i, a in enumerate(arrays)], n_keep
+
+
+def compact_window(keep, jidx, next_row, Jp: int, fields):
+    """Compact kept lanes to the window head (stable, so lane order
+    stays arrival order) and admit the next job-table rows into the
+    freed tail. ``fields`` is a sequence of ``(array, fill)`` pairs
+    compacted alongside ``jidx``; admitted lanes read ``fill`` until
+    their table row is gathered. Returns ``(jidx, next_row, compacted)``.
+    """
+    K = jidx.shape[0]
+    lanes = jnp.arange(K, dtype=jnp.int32)
+    arrays, n_keep = stable_compact(
+        keep, [jidx] + [a for a, _ in fields],
+        [0] + [fill for _, fill in fields])
+    fresh = jnp.minimum(next_row + lanes - n_keep, Jp - 1)
+    jidx = jnp.where(lanes >= n_keep, fresh, arrays[0])
+    next_row = jnp.minimum(next_row + (K - n_keep), Jp - 1)
+    return jidx, next_row, arrays[1:]
 
 
 # ------------------------------------------------------------- the scan core
@@ -343,74 +506,21 @@ def _simulate(policy: str, prm: Dict, tr_submit, tr_size, tr_runtime,
         used = jnp.sum(jnp.where(run, w_sz, 0.0))
 
         if policy == "fb":
-            # 2. §5.1 rule 3: WS demand beats PBJ (kills if needed). The
-            # event engine applies WS changes before tick grants; same
-            # order here.
-            ws_t = jnp.minimum(wsv, C)
-            need = jnp.maximum(owned - (C - ws_t), 0.0)
-            free = owned - used
-            kill_need = jnp.minimum(jnp.maximum(need - free, 0.0), used)
-            killed = _kill_selection(run, w_sz, w_cls, w_onehot, kill_need)
-            run = run & ~killed          # killed lanes re-queue derived
-            used = used - jnp.sum(jnp.where(killed, w_sz, 0.0))
-            owned = owned - need
+            # 2-4. §5.1 WS reclaim (kills) → tick grant → first-fit; the
+            # event engine applies WS changes before tick grants, and
+            # fb_actions replays that order.
+            owned, run, starts, killed, alloc, pbj_ev = fb_actions(
+                C, owned, run, used, queued, wsv, w_sz, w_cls, w_onehot,
+                is_tick, ff_passes)
             acc["kills"] += jnp.sum(killed)
-            # 3. §5.1 rule 4: on the tick, all idle resources → PBJ TRE.
-            idle = jnp.maximum(C - ws_t - owned, 0.0)
-            grant = jnp.where(is_tick, idle, 0.0)
-            owned = owned + grant
-            pbj_ev = (grant > 0).astype(f) + (need > 0).astype(f)
-            alloc = owned + ws_t
-            # 4. First-fit in arrival order over the window lanes (§6.5.2).
-            free = owned - used
-            _, starts = _first_fit(free, queued, w_sz, ff_passes)
-            run = run | starts
-            rem = jnp.where(starts, w_rt, rem)       # runtime read on start —
-            start_t = jnp.where(starts, t, start_t)  # kills reset lazily
         else:
-            # 2. §5.2 rule 3: idle pool flows to the PBJ TRE on the tick.
-            pool_ws = jnp.minimum(wsv, lb_ws)
-            pool_idle = jnp.maximum(B - pool_ws - pool_pbj, 0.0)
-            grant = jnp.where(is_tick, pool_idle, 0.0)
-            owned = owned + grant
-            pool_pbj = pool_pbj + grant
-            # 3. First-fit BEFORE the adjustment: the event engine's tick
-            # is grant → schedule → adjust → schedule, so the U/V/G rules
-            # must see post-start demand and free — evaluating them on
-            # pre-start state inflates DR1 by exactly the backlog the
-            # grant could have started, and those phantom requests
-            # compound into >50 % peak overshoots on long-lease grids.
-            free = owned - used
-            _, starts = _first_fit(free, queued, w_sz, ff_passes)
-            run = run | starts
-            rem = jnp.where(starts, w_rt, rem)
-            start_t = jnp.where(starts, t, start_t)
-            queued = queued & ~starts
-            used = used + jnp.sum(jnp.where(starts, w_sz, 0.0))
-            # 4. §5.2 rules 2–4: the U/V/G adjustment on the tick.
-            demand = jnp.sum(jnp.where(queued, w_sz, 0.0))
-            ratio = jnp.where(owned > 0, demand / jnp.maximum(owned, 1.0),
-                              jnp.where(demand > 0, jnp.inf, 0.0))
-            biggest = jnp.max(jnp.where(queued, w_sz, 0.0))
-            free = owned - used
-            dr1 = jnp.maximum(demand - owned, 0.0)
-            dr2 = jnp.maximum(biggest - free, 0.0)
-            req = jnp.where(is_tick & (ratio > U), dr1,
-                            jnp.where(is_tick & (biggest > owned), dr2, 0.0))
-            rss = jnp.where(is_tick & (ratio < V) & (req == 0.0),
-                            jnp.floor(G * jnp.maximum(free, 0.0)), 0.0)
-            owned = owned + req - rss
-            pool_pbj = jnp.minimum(pool_pbj, owned)   # leased released first
-            pbj_ev = (req > 0).astype(f) + (rss > 0).astype(f)
-            alloc = B + jnp.maximum(owned - pool_pbj, 0.0) \
-                + jnp.maximum(wsv - lb_ws, 0.0)
-            # 5. Second first-fit: the event engine runs the §6.5.2 scan
-            # again the moment a request is granted.
-            free = owned - used
-            _, starts2 = _first_fit(free, queued, w_sz, ff_passes)
-            run = run | starts2
-            rem = jnp.where(starts2, w_rt, rem)
-            start_t = jnp.where(starts2, t, start_t)
+            # 2-4. §5.2 pool grant → first-fit → U/V/G on post-start
+            # state → first-fit (the event engine's tick order).
+            owned, pool_pbj, run, starts, alloc, pbj_ev = flb_actions(
+                B, lb_ws, U, V, G, owned, pool_pbj, run, used, queued,
+                wsv, w_sz, is_tick, ff_passes)
+        rem = jnp.where(starts, w_rt, rem)       # runtime read on start —
+        start_t = jnp.where(starts, t, start_t)  # kills reset lazily
 
         # 6. Accounting (§6.1 metrics).
         alloc = jnp.where(active, alloc, 0.0)
@@ -435,24 +545,14 @@ def _simulate(policy: str, prm: Dict, tr_submit, tr_size, tr_runtime,
         done = jnp.zeros(K, bool)
         (owned, pool_pbj, run, done, rem, start_t, acc), _ = jax.lax.scan(
             substep, (owned, pool_pbj, run, done, rem, start_t, acc), steps)
-        # Compact finished lanes out of the window (stable, so lane order
-        # stays arrival order) and admit the next job-table rows into the
-        # freed tail. Rows are admitted ahead of their submit time, so
-        # mid-chunk arrivals are already on a lane when they submit.
-        keep = ~done
-        tgt = jnp.where(keep, jnp.cumsum(keep) - 1, K)      # K → dropped
-        n_keep = jnp.sum(keep)
-        fresh = jnp.minimum(next_row + lanes - n_keep, Jp - 1)
-        compact = lambda a, fill: jnp.where(
-            lanes >= n_keep, fill,
-            jnp.full((K,), fill, a.dtype).at[tgt].set(a, mode="drop"))
-        jidx = jnp.where(lanes >= n_keep, fresh,
-                         jnp.zeros(K, jnp.int32).at[tgt].set(jidx,
-                                                             mode="drop"))
-        run = compact(run, False)
-        rem = compact(rem, jnp.zeros((), f))
-        start_t = compact(start_t, jnp.zeros((), f))
-        next_row = jnp.minimum(next_row + (K - n_keep), Jp - 1)
+        # Compact finished lanes out of the window and admit the next
+        # job-table rows into the freed tail. Rows are admitted ahead of
+        # their submit time, so mid-chunk arrivals are already on a lane
+        # when they submit.
+        jidx, next_row, (run, rem, start_t) = compact_window(
+            ~done, jidx, next_row, Jp,
+            ((run, False), (rem, jnp.zeros((), f)),
+             (start_t, jnp.zeros((), f))))
         acc["window_overflow"] += (hi_end > next_row).astype(f)
         return (jidx, next_row, owned, pool_pbj, run, rem, start_t, acc), None
 
@@ -482,22 +582,36 @@ def _simulate(policy: str, prm: Dict, tr_submit, tr_size, tr_runtime,
     }
 
 
-@functools.partial(jax.jit, static_argnames=("fb_spec", "flb_spec"))
+@functools.lru_cache(maxsize=None)
+def _scan_lane(policy: str, spec: ScanSpec):
+    """The per-lane scan program as a ``(prm, packed_row) -> metrics``
+    closure. Cached per (policy, spec) so the function object is stable
+    across calls — it keys the jit caches of the batched runners."""
+    def lane(prm, pk: PackedWorkloads):
+        return _simulate(policy, prm, pk.submit, pk.size, pk.runtime,
+                         pk.ws, pk.ws0, pk.ws_changed, pk.hi_chunk, spec)
+    return lane
+
+
+@functools.partial(compat.jit, static_argnames=("fb_spec", "flb_spec"),
+                   donate_argnums=(2, 3))
 def _scan_grids_single(fb: Optional[FBGrid], flb: Optional[FLBGrid],
                        fb_packed: Optional[PackedWorkloads],
                        flb_packed: Optional[PackedWorkloads], *,
                        fb_spec: Optional[ScanSpec] = None,
                        flb_spec: Optional[ScanSpec] = None
                        ) -> Dict[str, Dict[str, jnp.ndarray]]:
-    """Single-device execution: the (trace, point) grid as nested vmaps."""
+    """Single-device execution: the (trace, point) grid as nested vmaps.
+
+    The packed-workload buffers are donated (on backends with buffer
+    donation — ``repro.compat.jit``) so a large (point × trace) grid
+    never holds the lane tables twice; callers repack per invocation.
+    """
     def run(policy, prm_tree, packed, spec):
-        one = lambda prm, s, z, r, w, w0, wc, h: _simulate(
-            policy, prm, s, z, r, w, w0, wc, h, spec)
-        over_points = jax.vmap(one, in_axes=(0,) + (None,) * 7)
-        over_traces = jax.vmap(over_points, in_axes=(None,) + (0,) * 7)
-        return over_traces(prm_tree, packed.submit, packed.size,
-                           packed.runtime, packed.ws, packed.ws0,
-                           packed.ws_changed, packed.hi_chunk)
+        lane = _scan_lane(policy, spec)
+        over_points = jax.vmap(lane, in_axes=(0, None))
+        over_traces = jax.vmap(over_points, in_axes=(None, 0))
+        return over_traces(prm_tree, packed)
 
     out: Dict[str, Dict[str, jnp.ndarray]] = {}
     if fb_spec is not None:
@@ -515,24 +629,23 @@ def _prm_tree(policy: str, grid) -> Dict[str, jnp.ndarray]:
             "G": grid.G, "lease": grid.lease}
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "spec", "mesh"))
-def _lanes_sharded(prm_tree, packed: PackedWorkloads, w_idx, p_idx, *,
-                   policy: str, spec: ScanSpec, mesh):
-    """One policy's flattened (trace, point) lanes split across ``mesh``.
+@functools.partial(compat.jit, static_argnames=("lane_fn", "mesh"),
+                   donate_argnums=(1,))
+def _sharded_lanes(prm_tree, packed, w_idx, p_idx, *, lane_fn, mesh):
+    """Flattened (trace, point) lanes split across ``mesh``, for any
+    per-lane program ``lane_fn(prm, packed_row) -> metrics``.
 
     ``w_idx`` / ``p_idx`` map each lane to its workload row and sweep
     point; they are sharded over the mesh's ``lanes`` axis while the
     grid and the packed workloads stay replicated, so each device
-    gathers just its own lane slice and runs the plain vmapped scan on
-    it — no collectives, the lanes are embarrassingly parallel.
+    gathers just its own lane slice and runs the plain vmapped program
+    on it — no collectives, the lanes are embarrassingly parallel. The
+    packed buffers are donated where the backend supports it.
     """
     def lanes(w_l, p_l, prm, pk):
         prm_l = jax.tree_util.tree_map(lambda a: a[p_l], prm)
-        one = lambda prm1, s, z, r, w, w0, wc, h: _simulate(
-            policy, prm1, s, z, r, w, w0, wc, h, spec)
-        return jax.vmap(one)(prm_l, pk.submit[w_l], pk.size[w_l],
-                             pk.runtime[w_l], pk.ws[w_l], pk.ws0[w_l],
-                             pk.ws_changed[w_l], pk.hi_chunk[w_l])
+        pk_l = jax.tree_util.tree_map(lambda a: a[w_l], pk)
+        return jax.vmap(lane_fn)(prm_l, pk_l)
 
     lane = PartitionSpec("lanes")
     rep = PartitionSpec()
@@ -541,40 +654,48 @@ def _lanes_sharded(prm_tree, packed: PackedWorkloads, w_idx, p_idx, *,
     return fn(w_idx, p_idx, prm_tree, packed)
 
 
-def _scan_grids_sharded(fb, flb, fb_packed, flb_packed, fb_spec, flb_spec,
-                        devices) -> Dict[str, Dict[str, jnp.ndarray]]:
-    """Shard each policy's (trace × point) lanes across ``devices``.
+def sharded_grid_map(lane_fn, prm_tree, packed, n_workloads: int,
+                     n_points: int, devices) -> Dict[str, jnp.ndarray]:
+    """Run ``lane_fn`` over the flattened (trace × point) lanes sharded
+    across ``devices`` and reshape the metrics back to ``(W, P)``.
 
     Lanes are padded up to a multiple of the device count with copies of
     lane 0 (every device needs an equal shard); the padding is dropped
-    before the metrics are reshaped back to ``(W, P)``, so padded lanes
-    never reach a reported metric. Each lane runs the identical
-    ``_simulate`` program the single-device path vmaps, so per-lane
-    results do not depend on the device split.
+    before the metrics are reshaped, so padded lanes never reach a
+    reported metric. Each lane runs the identical per-lane program the
+    single-device path vmaps, so per-lane results do not depend on the
+    device split. Shared by the fixed-dt scan and the event-round engine
+    (``repro.sim.rounds``); ``lane_fn`` must be a stable (cached) object
+    — it keys the jit cache.
     """
     mesh = Mesh(np.asarray(devices), ("lanes",))
     d = len(devices)
+    w, p = n_workloads, n_points
+    n = w * p
+    pad = -n % d
+    w_idx = np.concatenate([np.repeat(np.arange(w), p),
+                            np.zeros(pad, np.int64)]).astype(np.int32)
+    p_idx = np.concatenate([np.tile(np.arange(p), w),
+                            np.zeros(pad, np.int64)]).astype(np.int32)
+    flat = _sharded_lanes(prm_tree, packed, jnp.asarray(w_idx),
+                          jnp.asarray(p_idx), lane_fn=lane_fn, mesh=mesh)
+    return {k: v[:n].reshape(w, p) for k, v in flat.items()}
 
-    def run(policy, grid, packed, spec):
-        prm_tree = _prm_tree(policy, grid)
-        w = int(packed.submit.shape[0])
-        p = int(grid.lease.shape[0])
-        n = w * p
-        pad = -n % d
-        w_idx = np.concatenate([np.repeat(np.arange(w), p),
-                                np.zeros(pad, np.int64)]).astype(np.int32)
-        p_idx = np.concatenate([np.tile(np.arange(p), w),
-                                np.zeros(pad, np.int64)]).astype(np.int32)
-        flat = _lanes_sharded(prm_tree, packed, jnp.asarray(w_idx),
-                              jnp.asarray(p_idx), policy=policy, spec=spec,
-                              mesh=mesh)
-        return {k: v[:n].reshape(w, p) for k, v in flat.items()}
 
+def _scan_grids_sharded(fb, flb, fb_packed, flb_packed, fb_spec, flb_spec,
+                        devices) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Shard each policy's (trace × point) lanes across ``devices``
+    (see :func:`sharded_grid_map`)."""
     out: Dict[str, Dict[str, jnp.ndarray]] = {}
     if fb_spec is not None:
-        out["fb"] = run("fb", fb, fb_packed, fb_spec)
+        out["fb"] = sharded_grid_map(
+            _scan_lane("fb", fb_spec), _prm_tree("fb", fb), fb_packed,
+            int(fb_packed.submit.shape[0]), int(fb.lease.shape[0]), devices)
     if flb_spec is not None:
-        out["flb_nub"] = run("flb_nub", flb, flb_packed, flb_spec)
+        out["flb_nub"] = sharded_grid_map(
+            _scan_lane("flb_nub", flb_spec), _prm_tree("flb_nub", flb),
+            flb_packed, int(flb_packed.submit.shape[0]),
+            int(flb.lease.shape[0]), devices)
     return out
 
 
@@ -600,6 +721,12 @@ def scan_grids(fb: Optional[FBGrid], flb: Optional[FLBGrid],
     sharded path computes the identical per-lane program, only placed
     differently, so its rows are bit-identical to the single-device
     path's (tests/test_sweep_sharded.py pins this).
+
+    On backends with buffer donation (GPU/TPU — see ``repro.compat.jit``)
+    the packed-workload buffers are DONATED so large grids never hold
+    the lane tables twice: re-pack per call rather than reusing one
+    ``PackedWorkloads`` across calls. On CPU donation is dropped and
+    reuse is safe.
     """
     devs = compat.resolve_devices(devices)
     if devs is None:

@@ -7,10 +7,10 @@ time unit L against EC2+RightScale. ``run_sweep`` evaluates a whole grid
 of :class:`SweepPoint`s — mixing all four systems — in one call, and
 ``run_sweep_workloads`` adds a second batch axis over workload traces.
 
-Three execution paths, selected by ``mode``:
+Four execution paths, selected by ``mode``:
 
-  * **Vectorized fast path** (DCS and EC2+RightScale; modes ``"auto"``
-    and ``"scan"``). Both baselines are *stateless* given the trace —
+  * **Vectorized fast path** (DCS and EC2+RightScale; every mode except
+    ``"event"``). Both baselines are *stateless* given the trace —
     DCS is a static partition (its cost/peak curve is closed-form
     arithmetic over the grid) and the EC2 allocation curve is a pure
     function of (submit, runtime, L) evaluated for ALL sweep points at
@@ -26,19 +26,35 @@ Three execution paths, selected by ``mode``:
     integer metric (peak nodes, completed jobs, adjust events) matches
     exactly (tests/test_sweep.py).
 
+  * **Event-round fast path** (PhoenixCloud FB and FLB-NUB; modes
+    ``"rounds"`` and ``"auto"`` — the default scan-family mode). The
+    coordinated policies are stateful — kills, queue contents and U/V/G
+    adjustments feed back into the allocation — so they cannot be
+    closed-form; ``repro.sim.rounds`` batches them as a jitted
+    ``lax.while_loop`` whose every step jumps straight to the next
+    event (submit / completion / WS change / lease boundary) per lane.
+    Completions and the allocation integral are *exact*: completed jobs
+    match the event engine exactly and node-hours/peak stay within 5 %
+    (the residue is first-fit pass convergence and kill tie-breaking,
+    not time discretization). ``mode="auto"`` routes FB / FLB-NUB
+    points through this engine, except beyond-paper
+    ``checkpoint_preempt`` FB points which quietly fall back to the
+    event engine (the status-lane kill encoding always restarts from
+    scratch).
+
   * **Batched scan fast path** (PhoenixCloud FB and FLB-NUB; mode
-    ``"scan"``). The two coordinated policies are stateful — kills,
-    queue contents and U/V/G adjustments feed back into the allocation —
-    so they cannot be closed-form; ``repro.sim.scan`` re-expresses both
-    as a single jitted ``lax.scan`` over a fixed-size job window with
-    status lanes, ``vmap``-ed over sweep points AND packed workload
-    traces. Approximate by discretization: completed jobs within 2 %,
+    ``"scan"``). The fixed-``dt`` predecessor of the rounds engine:
+    ``repro.sim.scan`` re-expresses both policies as a single jitted
+    ``lax.scan`` over a fixed-size job window with status lanes,
+    ``vmap``-ed over sweep points AND packed workload traces.
+    Approximate by discretization: completed jobs within 2 %,
     node-hours and peak within 15 % of the event engine, parameter-sweep
     orderings (J1/J2 trends) identical (tests/test_sweep.py,
-    tests/test_scan_policies.py).
+    tests/test_scan_policies.py). Kept as the cross-check of the rounds
+    engine and for substep-resolution studies.
 
-  * **Event-engine path** (mode ``"event"``, and the FB / FLB-NUB
-    fallback in mode ``"auto"``). Each point runs through
+  * **Event-engine path** (mode ``"event"``, and the fallback for
+    points no fast path accepts). Each point runs through
     ``repro.sim.engine.run_sim`` on its own clone of the trace — the
     per-point reference every fast path is validated against.
 
@@ -52,6 +68,7 @@ lease later (the tick event sorts before the finish event).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -63,6 +80,7 @@ from repro import compat
 from repro.core.jobs import Job
 from repro.core.pbj_manager import PBJPolicyParams
 from repro.core.profiles import step_integral, step_points
+from repro.sim import rounds as roundslib
 from repro.sim import scan as scanlib
 from repro.sim.engine import (_SUBMIT, _TICK, _WS, SYSTEMS, build_dcs,
                               build_ec2_rightscale, build_fb, build_flb_nub,
@@ -71,10 +89,10 @@ from repro.sim.engine import (_SUBMIT, _TICK, _WS, SYSTEMS, build_dcs,
 __all__ = ["SweepPoint", "ScanOptions", "run_sweep", "run_sweep_workloads",
            "paper_grid"]
 
-MODES = ("auto", "event", "scan")
+MODES = ("auto", "event", "scan", "rounds")
 
 # Systems with a stateless closed-form fast path vs the stateful
-# coordinated policies that take the lax.scan path in mode="scan".
+# coordinated policies that take the batched scan/rounds paths.
 _VECTORIZED = ("dcs", "ec2")
 _SCANNABLE = ("fb", "flb_nub")
 
@@ -121,12 +139,16 @@ class SweepPoint:
 
 @dataclasses.dataclass(frozen=True)
 class ScanOptions:
-    """Tuning knobs of the ``mode="scan"`` fast path (see
-    ``repro.sim.scan``). The defaults are the settings the fidelity
-    contract is validated at; ``dt=None`` picks each policy's validated
-    substep (``scanlib.pick_dt`` — FB coarse, FLB-NUB fine), capped by
-    the grid's shortest lease and, for FLB-NUB, by the workloads' WS
-    change-point spacing. ``devices`` selects the execution backend
+    """Tuning knobs of the batched fast paths (``mode="scan"`` and
+    ``mode="rounds"``, see ``repro.sim.scan`` / ``repro.sim.rounds``).
+    The defaults are the settings the fidelity contracts are validated
+    at; ``dt=None`` picks each policy's validated substep
+    (``scanlib.pick_dt`` — FB coarse, FLB-NUB fine), capped by the
+    grid's shortest lease and, for FLB-NUB, by the workloads' WS
+    change-point spacing. The rounds engine has no substep — ``dt`` and
+    ``chunk_len`` only affect ``mode="scan"``. ``ff_passes=None`` takes
+    each engine's default (2 for the scan, 3 for the rounds engine).
+    ``devices`` selects the execution backend
     (``repro.compat.resolve_devices``): ``None`` runs the whole grid on
     one device, a count or device sequence shards the (point × trace)
     lanes across host devices via ``shard_map``."""
@@ -134,7 +156,7 @@ class ScanOptions:
     dt: Optional[float] = None
     window: Optional[int] = None
     chunk_len: Optional[int] = None
-    ff_passes: int = scanlib.DEFAULT_FF_PASSES
+    ff_passes: Optional[int] = None
     dtype: Optional[np.dtype] = None
     devices: compat.Devices = None
 
@@ -152,9 +174,25 @@ class ScanOptions:
         chunk_seconds = 3600.0 if policy == "fb" else 1800.0
         chunk = (self.chunk_len if self.chunk_len is not None
                  else max(2, int(round(chunk_seconds / dt))))
+        ff = (self.ff_passes if self.ff_passes is not None
+              else scanlib.DEFAULT_FF_PASSES)
         return scanlib.ScanSpec(
             n_steps=int(np.ceil(duration / dt)), dt=dt, window=window,
-            chunk_len=chunk, ff_passes=self.ff_passes)
+            chunk_len=chunk, ff_passes=ff)
+
+    def resolve_rounds(self, policy: str, leases: Sequence[float],
+                       duration: float, max_jobs: int,
+                       n_ws: int) -> roundslib.RoundsSpec:
+        window = (self.window if self.window is not None else
+                  (roundslib.FB_ROUNDS_WINDOW if policy == "fb"
+                   else roundslib.FLB_ROUNDS_WINDOW))
+        ff = (self.ff_passes if self.ff_passes is not None
+              else roundslib.ROUNDS_FF_PASSES)
+        return roundslib.RoundsSpec(
+            duration=duration,
+            max_rounds=roundslib.round_budget(max_jobs, n_ws, duration,
+                                              min(leases)),
+            window=window, ff_passes=ff)
 
 
 def _build(p: SweepPoint):
@@ -279,7 +317,107 @@ def _sweep_ec2(points: List[SweepPoint], jobs: Sequence[Job],
     return rows
 
 
-# ------------------------------------------------------- batched scan path
+# ------------------------------------------------ batched scan/rounds paths
+
+def _reject_preempt(points: List[SweepPoint], mode: str) -> None:
+    for p in points:
+        # The status-lane kill encoding resets a killed lane to its full
+        # runtime (repro.sim.scan / repro.sim.rounds); the beyond-paper
+        # checkpoint-preempt mode only exists on the event engine — fail
+        # loudly rather than silently report full-restart metrics for a
+        # preemption study. The guard is FB-only on purpose: FLB-NUB
+        # never force-releases (§5.2 satisfies WS elastically and only
+        # ever releases *free* nodes), so it has no kills for the
+        # preemption mode to change —
+        # tests/test_scan_policies.py::test_flb_nub_never_kills pins
+        # that invariant, making the exemption safe.
+        if p.system == "fb" and p.params.checkpoint_preempt:
+            raise ValueError(
+                f"{p.name()}: checkpoint_preempt is not supported by "
+                f"mode=\"{mode}\"; run this point with mode=\"auto\" or "
+                f"mode=\"event\"")
+
+
+def _fb_grid(points: List[SweepPoint], idxs: List[int],
+             f) -> scanlib.FBGrid:
+    return scanlib.FBGrid(
+        capacity=jnp.asarray([float(points[i].capacity) for i in idxs], f),
+        lease=jnp.asarray([points[i].lease_seconds for i in idxs], f))
+
+
+def _flb_grid(points: List[SweepPoint], idxs: List[int],
+              f) -> scanlib.FLBGrid:
+    return scanlib.FLBGrid(
+        B=jnp.asarray([float(points[i].lb_pbj + points[i].lb_ws)
+                       for i in idxs], f),
+        lb_ws=jnp.asarray([float(points[i].lb_ws) for i in idxs], f),
+        U=jnp.asarray([points[i].params.request_threshold
+                       for i in idxs], f),
+        V=jnp.asarray([points[i].params.release_threshold
+                       for i in idxs], f),
+        G=jnp.asarray([points[i].params.elastic_factor for i in idxs], f),
+        lease=jnp.asarray([points[i].lease_seconds for i in idxs], f))
+
+
+_DIAG_KEYS = ("window_overflow", "truncated")
+
+
+def _assemble_rows(points: List[SweepPoint], fb_idx: List[int],
+                   flb_idx: List[int], out: Dict, n_workloads: int,
+                   engine: str) -> List[List[Dict]]:
+    """Metric arrays → one row list per workload, aligned with
+    ``points``; diagnostics (window overflow, round truncation) ride
+    along per row so callers can see them."""
+    per_workload: List[List[Dict]] = []
+    for w in range(n_workloads):
+        rows: List[Optional[Dict]] = [None] * len(points)
+        for kind, idxs in (("fb", fb_idx), ("flb_nub", flb_idx)):
+            for j, i in enumerate(idxs):
+                m = {k: v[w][j] for k, v in out[kind].items()}
+                p = points[i]
+                rows[i] = {
+                    "system": p.name(), "system_kind": p.system,
+                    "engine": engine, "lease_seconds": p.lease_seconds,
+                    "completed_jobs": int(round(float(m["completed_jobs"]))),
+                    "avg_turnaround": float(m["avg_turnaround"]),
+                    "avg_execution": float(m["avg_execution"]),
+                    "node_hours": float(m["node_hours"]),
+                    "peak_nodes": int(round(float(m["peak_nodes"]))),
+                    "adjust_events": int(round(float(m["adjust_events"]))),
+                    "pbj_adjust_events": int(round(float(
+                        m["pbj_adjust_events"]))),
+                    "kills": int(round(float(m["kills"]))),
+                    "window_overflow": int(round(float(
+                        m["window_overflow"]))),
+                }
+                for k in _DIAG_KEYS[1:]:
+                    if k in m:
+                        rows[i][k] = int(round(float(m[k])))
+        per_workload.append(rows)                 # type: ignore[arg-type]
+    return per_workload                           # type: ignore[return-value]
+
+
+def _warn_diagnostics(per_workload: List[List[Dict]], engine: str) -> None:
+    """Surface lane diagnostics: a backlog that outgrew the job window
+    (results silently degrade — jobs start late or never) or a lane
+    that exhausted its round budget. Callers also get both per row."""
+    overflowed = [r["system"] for rows in per_workload for r in rows
+                  if r is not None and r.get("window_overflow", 0) > 0]
+    if overflowed:
+        warnings.warn(
+            f"{engine} sweep: job backlog outgrew the lane window on "
+            f"{len(overflowed)} row(s) ({', '.join(sorted(set(overflowed)))}"
+            f"); metrics under-report queued work — raise "
+            f"ScanOptions.window", RuntimeWarning, stacklevel=3)
+    truncated = [r["system"] for rows in per_workload for r in rows
+                 if r is not None and r.get("truncated", 0) > 0]
+    if truncated:
+        warnings.warn(
+            f"{engine} sweep: round budget exhausted before the horizon "
+            f"on {len(truncated)} row(s) "
+            f"({', '.join(sorted(set(truncated)))})", RuntimeWarning,
+            stacklevel=3)
+
 
 def _sweep_scan(points: List[SweepPoint],
                 workloads: Sequence[Tuple[Sequence[Job],
@@ -293,21 +431,7 @@ def _sweep_scan(points: List[SweepPoint],
     (policy, point, workload) grid is one jitted XLA program.
     """
     assert all(p.system in _SCANNABLE for p in points)
-    for p in points:
-        # The scan kill encoding resets a killed lane to its full runtime
-        # (repro.sim.scan); the beyond-paper checkpoint-preempt mode only
-        # exists on the event engine — fail loudly rather than silently
-        # report full-restart metrics for a preemption study. The guard
-        # is FB-only on purpose: FLB-NUB never force-releases (§5.2
-        # satisfies WS elastically and only ever releases *free* nodes),
-        # so it has no kills for the preemption mode to change —
-        # tests/test_scan_policies.py::test_flb_nub_never_kills pins
-        # that invariant, making the exemption safe.
-        if p.system == "fb" and p.params.checkpoint_preempt:
-            raise ValueError(
-                f"{p.name()}: checkpoint_preempt is not supported by "
-                f"mode=\"scan\"; run this point with mode=\"auto\" or "
-                f"mode=\"event\"")
+    _reject_preempt(points, "scan")
     fb_idx = [i for i, p in enumerate(points) if p.system == "fb"]
     flb_idx = [i for i, p in enumerate(points) if p.system == "flb_nub"]
     ws_traces = [ws for _, ws in workloads]
@@ -319,11 +443,7 @@ def _sweep_scan(points: List[SweepPoint],
         fb_packed, _ = scanlib.pack_workloads(
             workloads, duration, fb_spec.dt, window=fb_spec.window,
             chunk_len=fb_spec.chunk_len, dtype=options.dtype)
-        f = fb_packed.ws.dtype
-        fb = scanlib.FBGrid(
-            capacity=jnp.asarray([float(points[i].capacity)
-                                  for i in fb_idx], f),
-            lease=jnp.asarray([points[i].lease_seconds for i in fb_idx], f))
+        fb = _fb_grid(points, fb_idx, fb_packed.ws.dtype)
     if flb_idx:
         flb_spec = options.resolve(
             "flb_nub", [points[i].lease_seconds for i in flb_idx], duration,
@@ -331,48 +451,79 @@ def _sweep_scan(points: List[SweepPoint],
         flb_packed, _ = scanlib.pack_workloads(
             workloads, duration, flb_spec.dt, window=flb_spec.window,
             chunk_len=flb_spec.chunk_len, dtype=options.dtype)
-        f = flb_packed.ws.dtype
-        flb = scanlib.FLBGrid(
-            B=jnp.asarray([float(points[i].lb_pbj + points[i].lb_ws)
-                           for i in flb_idx], f),
-            lb_ws=jnp.asarray([float(points[i].lb_ws) for i in flb_idx], f),
-            U=jnp.asarray([points[i].params.request_threshold
-                           for i in flb_idx], f),
-            V=jnp.asarray([points[i].params.release_threshold
-                           for i in flb_idx], f),
-            G=jnp.asarray([points[i].params.elastic_factor
-                           for i in flb_idx], f),
-            lease=jnp.asarray([points[i].lease_seconds for i in flb_idx], f))
+        flb = _flb_grid(points, flb_idx, flb_packed.ws.dtype)
 
     out = scanlib.scan_grids(fb, flb, fb_packed, flb_packed,
                              fb_spec=fb_spec, flb_spec=flb_spec,
                              devices=options.devices)
     out = jax.tree_util.tree_map(np.asarray, out)
+    rows = _assemble_rows(points, fb_idx, flb_idx, out, len(workloads),
+                          "scan")
+    _warn_diagnostics(rows, "scan")
+    return rows
 
-    per_workload: List[List[Dict]] = []
-    for w in range(len(workloads)):
-        rows: List[Optional[Dict]] = [None] * len(points)
-        for kind, idxs in (("fb", fb_idx), ("flb_nub", flb_idx)):
-            for j, i in enumerate(idxs):
-                m = {k: v[w][j] for k, v in out[kind].items()}
-                p = points[i]
-                rows[i] = {
-                    "system": p.name(), "system_kind": p.system,
-                    "engine": "scan", "lease_seconds": p.lease_seconds,
-                    "completed_jobs": int(round(float(m["completed_jobs"]))),
-                    "avg_turnaround": float(m["avg_turnaround"]),
-                    "avg_execution": float(m["avg_execution"]),
-                    "node_hours": float(m["node_hours"]),
-                    "peak_nodes": int(round(float(m["peak_nodes"]))),
-                    "adjust_events": int(round(float(m["adjust_events"]))),
-                    "pbj_adjust_events": int(round(float(
-                        m["pbj_adjust_events"]))),
-                    "kills": int(round(float(m["kills"]))),
-                    "window_overflow": int(round(float(
-                        m["window_overflow"]))),
-                }
-        per_workload.append(rows)                 # type: ignore[arg-type]
-    return per_workload                           # type: ignore[return-value]
+
+def _sweep_rounds(points: List[SweepPoint],
+                  workloads: Sequence[Tuple[Sequence[Job],
+                                            Sequence[Tuple[float, int]]]],
+                  duration: float,
+                  options: ScanOptions) -> List[List[Dict]]:
+    """FB and FLB-NUB points through the event-round fast path
+    (``repro.sim.rounds``): adaptive jump-to-next-event steps with
+    exact completions, batched over sweep points like the scan.
+
+    Workload traces run as *separate* invocations of the same compiled
+    program (the packs share one shape, so there is exactly one compile
+    per policy): unlike the scan's fixed grid, event-round lane lengths
+    differ per trace, and one big batch would run every lane to the
+    slowest lane's round count while blowing the cache footprint —
+    splitting the trace axis is measurably faster than vmapping it.
+    With ``devices`` set, each invocation shards its (point) lanes
+    across the devices.
+    """
+    assert all(p.system in _SCANNABLE for p in points)
+    _reject_preempt(points, "rounds")
+    fb_idx = [i for i, p in enumerate(points) if p.system == "fb"]
+    flb_idx = [i for i, p in enumerate(points) if p.system == "flb_nub"]
+    max_jobs = max(len(jobs) for jobs, _ in workloads)
+    n_ws = max(len(ws) for _, ws in workloads)
+
+    fb = flb = fb_packed = flb_packed = fb_spec = flb_spec = None
+    if fb_idx:
+        leases = [points[i].lease_seconds for i in fb_idx]
+        fb_spec = options.resolve_rounds("fb", leases, duration,
+                                         max_jobs, n_ws)
+        fb_packed = roundslib.pack_event_workloads(
+            workloads, duration, fb_spec.window, "fb", leases,
+            [float(points[i].capacity) for i in fb_idx],
+            dtype=options.dtype)
+        fb = _fb_grid(points, fb_idx, fb_packed.submit.dtype)
+    if flb_idx:
+        leases = [points[i].lease_seconds for i in flb_idx]
+        flb_spec = options.resolve_rounds("flb_nub", leases, duration,
+                                          max_jobs, n_ws)
+        flb_packed = roundslib.pack_event_workloads(
+            workloads, duration, flb_spec.window, "flb_nub", leases,
+            [float(points[i].lb_ws) for i in flb_idx],
+            dtype=options.dtype)
+        flb = _flb_grid(points, flb_idx, flb_packed.submit.dtype)
+
+    row1 = lambda tree, w: jax.tree_util.tree_map(
+        lambda a: a[w:w + 1], tree)
+    outs = [roundslib.rounds_grids(
+        fb, flb,
+        row1(fb_packed, w) if fb_packed is not None else None,
+        row1(flb_packed, w) if flb_packed is not None else None,
+        fb_spec=fb_spec, flb_spec=flb_spec, devices=options.devices)
+        for w in range(len(workloads))]
+    outs = jax.tree_util.tree_map(np.asarray, outs)
+    out = {kind: {k: np.concatenate([o[kind][k] for o in outs])
+                  for k in outs[0][kind]}
+           for kind in outs[0]}
+    rows = _assemble_rows(points, fb_idx, flb_idx, out, len(workloads),
+                          "rounds")
+    _warn_diagnostics(rows, "rounds")
+    return rows
 
 
 # --------------------------------------------------------------- the sweep
@@ -396,24 +547,32 @@ def run_sweep(points: Sequence[SweepPoint], jobs: Sequence[Job],
 
     Returns one row dict per point, in input order, each tagged with
     ``engine`` = ``"vectorized"`` (exact batched jnp fast path),
-    ``"scan"`` (batched lax.scan fast path for FB / FLB-NUB, mode
-    ``"scan"`` only) or ``"event"`` (per-point discrete-event run).
+    ``"rounds"`` (event-round fast path for FB / FLB-NUB),
+    ``"scan"`` (fixed-dt lax.scan fast path, mode ``"scan"`` only) or
+    ``"event"`` (per-point discrete-event run).
 
     ``mode`` selects the execution paths (see module docstring):
-    ``"auto"`` (default) vectorizes DCS/EC2 and runs FB / FLB-NUB on the
-    event engine; ``"scan"`` additionally batches FB / FLB-NUB through
-    ``repro.sim.scan``; ``"event"`` runs everything on the event engine —
-    the cross-validation reference used by tests/test_sweep.py. The
-    legacy ``vectorize=False`` flag is equivalent to ``mode="event"``.
+    ``"auto"`` (default) vectorizes DCS/EC2 and batches FB / FLB-NUB
+    through the event-round engine (``repro.sim.rounds`` — completed
+    jobs exact, node-hours/peak within 5 %), falling back to the event
+    engine for points the fast path rejects (FB with
+    ``checkpoint_preempt``); ``"rounds"`` is the same but *fails* on
+    such points; ``"scan"`` batches FB / FLB-NUB through the fixed-dt
+    ``repro.sim.scan`` instead; ``"event"`` runs everything on the
+    event engine — the cross-validation reference used by
+    tests/test_sweep.py. The legacy ``vectorize=False`` flag is
+    equivalent to ``mode="event"``.
 
-    ``devices`` (shorthand for ``scan_options.devices``) shards the scan
-    path's (point × trace) lanes across that many host devices — see
-    :class:`ScanOptions`. It only affects ``mode="scan"``.
+    ``devices`` (shorthand for ``scan_options.devices``) shards the
+    fast path's (point × trace) lanes across that many host devices —
+    see :class:`ScanOptions`. It affects modes ``"auto"``, ``"scan"``
+    and ``"rounds"``.
 
     Vectorized DCS rows carry cost/peak metrics only (use ``.get`` or
-    ``mode="event"`` when job metrics are needed for a DCS point); scan
-    rows carry the full metric set but job metrics are approximations
-    within the documented tolerances.
+    ``mode="event"`` when job metrics are needed for a DCS point);
+    scan/rounds rows carry the full metric set plus lane diagnostics
+    (``window_overflow``, and ``truncated`` for rounds) — a nonzero
+    diagnostic also raises a ``RuntimeWarning``.
     """
     return run_sweep_workloads(points, [(jobs, ws_trace)], duration,
                                vectorize=vectorize, mode=mode,
@@ -433,9 +592,9 @@ def run_sweep_workloads(points: Sequence[SweepPoint],
     """Evaluate a sweep grid over SEVERAL workload traces at once.
 
     Returns ``rows[w][i]`` — one row list per workload, aligned with
-    ``points``. In ``mode="scan"`` the FB / FLB-NUB points of ALL
-    workloads batch through a single jitted scan (the trace axis is a
-    second ``vmap`` axis); DCS / EC2 points run the exact vectorized
+    ``points``. In the batched modes the FB / FLB-NUB points of ALL
+    workloads batch through a single jitted program (the trace axis is
+    a second ``vmap`` axis); DCS / EC2 points run the exact vectorized
     path per workload, and the event fallback runs per (point, workload)
     pair. All workloads share one measurement horizon ``duration``
     (§6.1) — the default is the latest horizon any workload implies.
@@ -450,7 +609,7 @@ def run_sweep_workloads(points: Sequence[SweepPoint],
     rows: List[List[Optional[Dict]]] = [
         [None] * len(points) for _ in workloads]
 
-    if mode in ("auto", "scan"):
+    if mode != "event":
         dcs_idx = [i for i, p in enumerate(points) if p.system == "dcs"]
         ec2_idx = [i for i, p in enumerate(points) if p.system == "ec2"]
         for w, (jobs, ws_trace) in enumerate(workloads):
@@ -465,15 +624,23 @@ def run_sweep_workloads(points: Sequence[SweepPoint],
                                              jobs, ws_trace, duration)):
                     rows[w][i] = row
 
-    if mode == "scan":
-        scan_idx = [i for i, p in enumerate(points)
-                    if p.system in _SCANNABLE]
-        if scan_idx:
-            scan_rows = _sweep_scan([points[i] for i in scan_idx],
-                                    workloads, duration, scan_options)
+    if mode in ("auto", "scan", "rounds"):
+        batch_idx = [i for i, p in enumerate(points)
+                     if p.system in _SCANNABLE]
+        if mode == "auto":
+            # The event-round engine is the default scan-family mode;
+            # points it rejects (FB checkpoint_preempt) quietly take
+            # the per-point event path below instead of failing.
+            batch_idx = [i for i in batch_idx
+                         if not (points[i].system == "fb"
+                                 and points[i].params.checkpoint_preempt)]
+        fast = _sweep_scan if mode == "scan" else _sweep_rounds
+        if batch_idx:
+            fast_rows = fast([points[i] for i in batch_idx],
+                             workloads, duration, scan_options)
             for w in range(len(workloads)):
-                for j, i in enumerate(scan_idx):
-                    rows[w][i] = scan_rows[w][j]
+                for j, i in enumerate(batch_idx):
+                    rows[w][i] = fast_rows[w][j]
 
     for w, (jobs, ws_trace) in enumerate(workloads):
         for i, p in enumerate(points):

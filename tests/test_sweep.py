@@ -48,22 +48,34 @@ def test_vectorized_matches_event_engine_exactly(workload, grid):
     ref = run_sweep(grid, jobs, ws, T, vectorize=False)
     assert [r["system"] for r in vec] == [p.name() for p in grid]
     for point, v, r in zip(grid, vec, ref):
-        expected_engine = ("vectorized" if point.system in ("dcs", "ec2")
-                           else "event")
-        assert v["engine"] == expected_engine, point
         assert r["engine"] == "event"
-        # Exact integer agreement.
-        assert v["peak_nodes"] == r["peak_nodes"], point
-        assert v["adjust_events"] == r["adjust_events"], point
-        assert v["pbj_adjust_events"] == r["pbj_adjust_events"], point
-        assert v["kills"] == r["kills"], point
-        if "completed_jobs" in v and "completed_jobs" in r:
+        if point.system in ("dcs", "ec2"):
+            assert v["engine"] == "vectorized", point
+            # Exact integer agreement.
+            assert v["peak_nodes"] == r["peak_nodes"], point
+            assert v["adjust_events"] == r["adjust_events"], point
+            assert v["pbj_adjust_events"] == r["pbj_adjust_events"], point
+            assert v["kills"] == r["kills"], point
+            if "completed_jobs" in v and "completed_jobs" in r:
+                assert v["completed_jobs"] == r["completed_jobs"], point
+                assert v["avg_turnaround"] == pytest.approx(
+                    r["avg_turnaround"], rel=1e-9)
+            # Node-hours to float64 round-off.
+            assert v["node_hours"] == pytest.approx(r["node_hours"],
+                                                    rel=1e-9,
+                                                    abs=1e-9), point
+        else:
+            # The stateful policies ride the event-round engine in auto
+            # mode (the default scan-family fast path): completed jobs
+            # are exact by construction, node-hours and peak within its
+            # 5 % contract.
+            assert v["engine"] == "rounds", point
             assert v["completed_jobs"] == r["completed_jobs"], point
-            assert v["avg_turnaround"] == pytest.approx(
-                r["avg_turnaround"], rel=1e-9)
-        # Node-hours to float64 round-off.
-        assert v["node_hours"] == pytest.approx(r["node_hours"], rel=1e-9,
-                                                abs=1e-9), point
+            assert v["node_hours"] == pytest.approx(r["node_hours"],
+                                                    rel=0.05), point
+            assert v["peak_nodes"] == pytest.approx(r["peak_nodes"],
+                                                    rel=0.05), point
+            assert v["window_overflow"] == 0 and v["truncated"] == 0
 
 
 def test_vectorized_ec2_against_direct_run_sim(workload):
@@ -92,8 +104,10 @@ def test_paper_grid_shape_and_fallback_routing(workload):
     by_kind = {r["system_kind"]: r["engine"] for r in rows}
     assert by_kind["dcs"] == "vectorized"
     assert by_kind["ec2"] == "vectorized"
-    assert by_kind["fb"] == "event"
-    assert by_kind["flb_nub"] == "event"
+    # The event-round engine is the default scan-family mode for the
+    # stateful policies since this PR.
+    assert by_kind["fb"] == "rounds"
+    assert by_kind["flb_nub"] == "rounds"
     # Every builder constructs a ProvisioningSystem with the right lease.
     for p in pts:
         assert _build(p).lease_seconds == p.lease_seconds

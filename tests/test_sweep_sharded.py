@@ -64,6 +64,18 @@ def test_sharded_matches_single_device_on_odd_lane_count():
         # The scan rows really took the scan engine on both backends.
         assert all(r["engine"] == "scan" for row in sharded
                    for r in row[:-1])
+        # Same bit-identity contract for the event-round engine (its
+        # per-workload invocations shard their 3 point-lanes over the
+        # 2 devices - the odd-lane pad-and-drop path again).
+        single_r = run_sweep_workloads(pts, wls, T, mode="rounds")
+        sharded_r = run_sweep_workloads(pts, wls, T, mode="rounds",
+                                        devices=2)
+        assert sharded_r == single_r, [
+            (w, i, a, b)
+            for w, (ra, rb) in enumerate(zip(single_r, sharded_r))
+            for i, (a, b) in enumerate(zip(ra, rb)) if a != b][:3]
+        assert all(r["engine"] == "rounds" for row in sharded_r
+                   for r in row[:-1])
         print("OK")
     """)
     assert "OK" in out
