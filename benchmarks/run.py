@@ -73,17 +73,47 @@ def _derived(name, rows):
     return f"rows={len(rows)}"
 
 
+def rounds_contract_ok(rounds_fidelity: dict, donation_warnings,
+                       sharded_match: bool) -> bool:
+    """The rounds engine's CI gate, thresholds imported from
+    ``repro.sim.contracts.ROUNDS_CONTRACT`` — the same table the test
+    suite asserts, so the gate and the tests cannot drift apart
+    (tests/test_engine_differential.py pins this coupling)."""
+    from repro.sim.contracts import ROUNDS_CONTRACT as RC
+    rf = rounds_fidelity
+    return bool(
+        rf["completed_jobs_exact"]
+        and rf["max_drift_node_hours"] <= RC.node_hours_rel
+        and rf["max_drift_peak"] <= RC.peak_rel
+        and rf["truncated_lanes"] == 0
+        and not donation_warnings
+        and sharded_match)
+
+
+def _timed(fn, reps: int = 3):
+    """Best-of-``reps`` wall time for an already-warm callable — the
+    2-core CI boxes are noisy co-tenants, and a single timed run has
+    bounced by +/-30% between invocations of the same program."""
+    best, out = float("inf"), None
+    for _ in range(reps):
+        t0 = time.time()
+        out = fn()
+        best = min(best, time.time() - t0)
+    return max(best, 1e-6), out
+
+
 def sweep_benchmark(tiny: bool = False, devices: int = 0) -> dict:
-    """Event engine vs batched scan vs event-round engine (vs their
-    sharded variants when ``devices >= 2``) on the paper's
-    coordinated-policy grids. Returns the BENCH_sweep.json payload."""
+    """Event engine vs batched scan vs event-round engine (plain and
+    coalesced, vs their sharded variants when ``devices >= 2``) on the
+    paper's coordinated-policy grids. Returns the BENCH_sweep.json
+    payload."""
     import warnings
 
     import jax
     from repro import compat
     from repro.sim import traces
     from repro.core.profiles import scale_profile
-    from repro.sim.sweep import SweepPoint, run_sweep_workloads
+    from repro.sim.sweep import ScanOptions, SweepPoint, run_sweep_workloads
 
     if devices:
         # Fail before the (minutes-long) event baseline, with the single
@@ -131,10 +161,17 @@ def sweep_benchmark(tiny: bool = False, devices: int = 0) -> dict:
     out = {"grid": [p.name() for p in points],
            "workloads": len(workloads), "evals": n_evals, "tiny": tiny}
 
-    t0 = time.time()
-    event_rows = run_sweep_workloads(points, workloads, horizon,
-                                     mode="event")
-    event_wall = time.time() - t0
+    # The event engine has no compile step, so both runs are timed —
+    # best-of-2 keeps the speedup_vs_event ratios symmetric with the
+    # best-of-N fast-path walls instead of dividing by one noisy draw.
+    event_wall, event_rows = _timed(lambda: run_sweep_workloads(
+        points, workloads, horizon, mode="event"), reps=2)
+
+    # The coalesced-rounds variant: contended stretches fold up to
+    # COALESCE_BATCH completions (plus riding arrivals) per event round
+    # via the bulk top-k/prefix-feasibility section of repro.sim.rounds.
+    from repro.sim.rounds import COALESCE_BATCH
+    coalesce_opts = ScanOptions(coalesce=COALESCE_BATCH)
 
     # Any donation ("aliasing") warning from the jitted fast paths means
     # the compat platform gate failed — record them and gate below.
@@ -142,29 +179,28 @@ def sweep_benchmark(tiny: bool = False, devices: int = 0) -> dict:
         warnings.simplefilter("always")
 
         t0 = time.time()
-        scan_rows = run_sweep_workloads(points, workloads, horizon,
-                                        mode="scan")
+        run_sweep_workloads(points, workloads, horizon, mode="scan")
         scan_compile = time.time() - t0
-        t0 = time.time()
-        scan_rows = run_sweep_workloads(points, workloads, horizon,
-                                        mode="scan")
-        scan_wall = max(time.time() - t0, 1e-6)
+        scan_wall, scan_rows = _timed(lambda: run_sweep_workloads(
+            points, workloads, horizon, mode="scan"))
 
         t0 = time.time()
-        rounds_rows = run_sweep_workloads(points, workloads, horizon,
-                                          mode="rounds")
+        run_sweep_workloads(points, workloads, horizon, mode="rounds")
         rounds_compile = time.time() - t0
-        t0 = time.time()
-        rounds_rows = run_sweep_workloads(points, workloads, horizon,
-                                          mode="rounds")
-        rounds_wall = max(time.time() - t0, 1e-6)
+        rounds_wall, rounds_rows = _timed(lambda: run_sweep_workloads(
+            points, workloads, horizon, mode="rounds"))
+
+        run_sweep_workloads(points, workloads, horizon, mode="rounds",
+                            scan_options=coalesce_opts)
+        coal_wall, coal_rows = _timed(lambda: run_sweep_workloads(
+            points, workloads, horizon, mode="rounds",
+            scan_options=coalesce_opts))
     donation_warnings = [str(w.message) for w in caught
                          if "donat" in str(w.message).lower()
                          or "alias" in str(w.message).lower()]
 
     out["event"] = {"wall_s": round(event_wall, 4),
-                    "points_per_sec": round(n_evals / max(event_wall, 1e-6),
-                                            2)}
+                    "points_per_sec": round(n_evals / event_wall, 2)}
     out["scan"] = {"compile_plus_run_s": round(scan_compile, 4),
                    "wall_s": round(scan_wall, 4),
                    "points_per_sec": round(n_evals / scan_wall, 2)}
@@ -173,19 +209,34 @@ def sweep_benchmark(tiny: bool = False, devices: int = 0) -> dict:
                      "points_per_sec": round(n_evals / rounds_wall, 2),
                      "speedup_vs_event": round(event_wall / rounds_wall, 2),
                      "speedup_vs_scan": round(scan_wall / rounds_wall, 2)}
+    out["rounds_coalesced"] = {
+        "coalesce_batch": COALESCE_BATCH,
+        "wall_s": round(coal_wall, 4),
+        "points_per_sec": round(n_evals / coal_wall, 2),
+        "speedup_vs_event": round(event_wall / coal_wall, 2),
+        "speedup_vs_scan": round(scan_wall / coal_wall, 2),
+        "speedup_vs_rounds": round(rounds_wall / coal_wall, 2),
+        "max_rounds": max(r.get("rounds", 0)
+                          for rows_w in coal_rows for r in rows_w),
+        "max_rounds_uncoalesced": max(r.get("rounds", 0)
+                                      for rows_w in rounds_rows
+                                      for r in rows_w),
+        "coalesced_events": sum(r.get("coalesced", 0)
+                                for rows_w in coal_rows
+                                for r in rows_w),
+    }
     out["speedup"] = round(event_wall / scan_wall, 2)
     out["donation_warnings"] = donation_warnings
 
     sharded_rows = rounds_sharded_rows = None
     if devices and devices >= 2:
         t0 = time.time()
-        sharded_rows = run_sweep_workloads(points, workloads, horizon,
-                                           mode="scan", devices=devices)
+        run_sweep_workloads(points, workloads, horizon, mode="scan",
+                            devices=devices)
         sharded_compile = time.time() - t0
-        t0 = time.time()
-        sharded_rows = run_sweep_workloads(points, workloads, horizon,
-                                           mode="scan", devices=devices)
-        sharded_wall = max(time.time() - t0, 1e-6)
+        sharded_wall, sharded_rows = _timed(lambda: run_sweep_workloads(
+            points, workloads, horizon, mode="scan", devices=devices),
+            reps=2)
         out["scan_sharded"] = {
             "devices": devices,
             "compile_plus_run_s": round(sharded_compile, 4),
@@ -198,13 +249,13 @@ def sweep_benchmark(tiny: bool = False, devices: int = 0) -> dict:
             "rows_match_scan": sharded_rows == scan_rows,
         }
         t0 = time.time()
-        rounds_sharded_rows = run_sweep_workloads(
-            points, workloads, horizon, mode="rounds", devices=devices)
+        run_sweep_workloads(points, workloads, horizon, mode="rounds",
+                            devices=devices)
         rsh_compile = time.time() - t0
-        t0 = time.time()
-        rounds_sharded_rows = run_sweep_workloads(
-            points, workloads, horizon, mode="rounds", devices=devices)
-        rsh_wall = max(time.time() - t0, 1e-6)
+        rsh_wall, rounds_sharded_rows = _timed(
+            lambda: run_sweep_workloads(points, workloads, horizon,
+                                        mode="rounds", devices=devices),
+            reps=2)
         out["rounds_sharded"] = {
             "devices": devices,
             "compile_plus_run_s": round(rsh_compile, 4),
@@ -260,35 +311,44 @@ def sweep_benchmark(tiny: bool = False, devices: int = 0) -> dict:
                     "drift_peak": round(dp, 4)})
         return worst, comparisons
 
+    def _fidelity(rows, cmp_rows):
+        return {
+            "completed_jobs_exact": all(c["jobs_exact"] for c in cmp_rows),
+            "max_drift_node_hours": round(max(c["drift_node_hours"]
+                                              for c in cmp_rows), 4),
+            "max_drift_peak": round(max(c["drift_peak"]
+                                        for c in cmp_rows), 4),
+            "truncated_lanes": sum(r.get("truncated", 0)
+                                   for rows_w in rows for r in rows_w),
+        }
+
     scan_drift, scan_cmp = _drift(scan_rows)
     rounds_drift, rounds_cmp = _drift(rounds_rows)
+    _, coal_cmp = _drift(coal_rows)
     out["max_drift"] = round(max(scan_drift), 4)
-    out["rounds_fidelity"] = {
-        "completed_jobs_exact": all(c["jobs_exact"] for c in rounds_cmp),
-        "max_drift_node_hours": round(max(c["drift_node_hours"]
-                                          for c in rounds_cmp), 4),
-        "max_drift_peak": round(max(c["drift_peak"]
-                                    for c in rounds_cmp), 4),
-        "truncated_lanes": sum(r.get("truncated", 0)
-                               for rows_w in rounds_rows for r in rows_w),
-    }
+    out["rounds_fidelity"] = _fidelity(rounds_rows, rounds_cmp)
+    out["rounds_coalesced_fidelity"] = _fidelity(coal_rows, coal_cmp)
     if sharded_rows is not None and not out["scan_sharded"]["rows_match_scan"]:
         # Surface a sharding bug through the same CI gate as fidelity.
         out["max_drift"] = max(out["max_drift"], 1.0)
     out["comparisons"] = scan_cmp
     out["rounds_comparisons"] = rounds_cmp
-    # The rounds contract, folded into one gate flag: completed jobs
-    # exact, node-hours and peak within 5 %, sharded rows bit-identical,
-    # no lane truncation, no donation warnings.
-    rf = out["rounds_fidelity"]
-    out["rounds_contract_ok"] = bool(
-        rf["completed_jobs_exact"]
-        and rf["max_drift_node_hours"] <= 0.05
-        and rf["max_drift_peak"] <= 0.05
-        and rf["truncated_lanes"] == 0
-        and not donation_warnings
-        and (rounds_sharded_rows is None
-             or out["rounds_sharded"]["rows_match_rounds"]))
+    # The rounds contract (thresholds imported from
+    # repro.sim.contracts — the table the tests assert), folded into
+    # one gate flag per engine variant: completed jobs exact,
+    # node-hours and peak within the contract band, sharded rows
+    # bit-identical, no lane truncation, no donation warnings. The
+    # coalesced variant must satisfy the SAME contract — the coalescer
+    # may never buy speed with fidelity.
+    out["rounds_contract_ok"] = rounds_contract_ok(
+        out["rounds_fidelity"], donation_warnings,
+        rounds_sharded_rows is None
+        or out["rounds_sharded"]["rows_match_rounds"])
+    # The coalesced sharded-identity leg is pinned by
+    # tests/test_sweep_sharded.py (subprocess, 2 forced devices), not
+    # re-timed here — True stands for "covered elsewhere".
+    out["rounds_coalesced_contract_ok"] = rounds_contract_ok(
+        out["rounds_coalesced_fidelity"], donation_warnings, True)
     return out
 
 
@@ -318,14 +378,19 @@ def run_sweep_bench(argv) -> int:
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     rd = out["rounds"]
+    rco = out["rounds_coalesced"]
     line = (f"evals={out['evals']} event={out['event']['wall_s']}s "
             f"({out['event']['points_per_sec']} pts/s) "
             f"scan={out['scan']['wall_s']}s "
             f"({out['scan']['points_per_sec']} pts/s) "
             f"rounds={rd['wall_s']}s ({rd['points_per_sec']} pts/s, "
             f"{rd['speedup_vs_event']}x event) "
+            f"rounds_coalesced[{rco['coalesce_batch']}]={rco['wall_s']}s "
+            f"({rco['points_per_sec']} pts/s, max_rounds "
+            f"{rco['max_rounds_uncoalesced']}->{rco['max_rounds']}) "
             f"max_drift(scan)={out['max_drift']} "
-            f"rounds_contract_ok={out['rounds_contract_ok']}")
+            f"rounds_contract_ok={out['rounds_contract_ok']} "
+            f"coalesced_contract_ok={out['rounds_coalesced_contract_ok']}")
     for key, base in (("scan_sharded", "scan"), ("rounds_sharded",
                                                  "rounds")):
         if key in out:
@@ -345,6 +410,10 @@ def run_sweep_bench(argv) -> int:
             print(f"ROUNDS CONTRACT FAILED: {out['rounds_fidelity']} "
                   f"donation_warnings={out['donation_warnings']}",
                   file=sys.stderr)
+            rc = 1
+        if not out["rounds_coalesced_contract_ok"]:
+            print(f"COALESCED ROUNDS CONTRACT FAILED: "
+                  f"{out['rounds_coalesced_fidelity']}", file=sys.stderr)
             rc = 1
     if args.perf_gate is not None:
         ratio = rd["points_per_sec"] / max(out["scan"]["points_per_sec"],

@@ -1,0 +1,99 @@
+"""Per-engine fidelity contracts — the single source of truth.
+
+Every fast path of the sweep engine is validated against the
+discrete-event reference (``repro.sim.engine.run_sim``), each with its
+own tolerance band:
+
+* the fixed-``dt`` **scan** is approximate by time discretization —
+  completed jobs within 2 %, node-hours and peak within 15 %;
+* the event-round **rounds** engine (coalesced or not) replays events
+  at exact times — completed jobs must match EXACTLY (and completion
+  times bit-match in float64), node-hours and peak within 5 % (the
+  residue is first-fit pass convergence and §5.1 kill tie-breaking,
+  not discretization);
+* the **vectorized** DCS/EC2 baselines are closed-form — exact to
+  round-off (integer metrics equal, node-hours to ~1e-9 relative).
+
+Both the test suite (tests/test_engine_differential.py) and the CI
+benchmark gate (``benchmarks/run.py sweep --check-fidelity``) import
+THIS table, so the gate and the tests cannot drift apart: a contract
+change is one edit, reviewed once, enforced everywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["EngineContract", "SCAN_CONTRACT", "ROUNDS_CONTRACT",
+           "VECTORIZED_CONTRACT", "CONTRACTS", "check_fidelity"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineContract:
+    """Tolerances of one engine vs the event reference: relative drift
+    bounds per metric, plus whether completed-job counts must be exact
+    (a stronger statement than ``completed_rel == 0`` — it is asserted
+    on the integer counts, with no epsilon)."""
+
+    completed_rel: float
+    node_hours_rel: float
+    peak_rel: float
+    completed_exact: bool = False
+
+    def check_row(self, fast: dict, event: dict) -> list:
+        """Compare one sweep row against its event-engine reference.
+        Returns a list of violation strings (empty = within contract).
+        """
+        violations = []
+        ev_jobs = event["completed_jobs"]
+        dj = abs(fast["completed_jobs"] - ev_jobs) / max(1, ev_jobs)
+        if self.completed_exact:
+            if fast["completed_jobs"] != ev_jobs:
+                violations.append(
+                    f"completed_jobs {fast['completed_jobs']} != "
+                    f"{ev_jobs} (exact contract)")
+        elif dj > self.completed_rel:
+            violations.append(
+                f"completed_jobs drift {dj:.4f} > {self.completed_rel}")
+        dn = abs(fast["node_hours"] - event["node_hours"]) \
+            / max(1e-9, event["node_hours"])
+        if dn > self.node_hours_rel:
+            violations.append(
+                f"node_hours drift {dn:.4f} > {self.node_hours_rel}")
+        dp = abs(fast["peak_nodes"] - event["peak_nodes"]) \
+            / max(1, event["peak_nodes"])
+        if dp > self.peak_rel:
+            violations.append(
+                f"peak_nodes drift {dp:.4f} > {self.peak_rel}")
+        return violations
+
+
+SCAN_CONTRACT = EngineContract(completed_rel=0.02, node_hours_rel=0.15,
+                               peak_rel=0.15)
+ROUNDS_CONTRACT = EngineContract(completed_rel=0.0, node_hours_rel=0.05,
+                                 peak_rel=0.05, completed_exact=True)
+VECTORIZED_CONTRACT = EngineContract(completed_rel=0.0,
+                                     node_hours_rel=1e-9, peak_rel=0.0,
+                                     completed_exact=True)
+
+# Keyed by the ``engine`` tag run_sweep puts on each row.
+CONTRACTS = {
+    "scan": SCAN_CONTRACT,
+    "rounds": ROUNDS_CONTRACT,
+    "vectorized": VECTORIZED_CONTRACT,
+}
+
+
+def check_fidelity(fast_rows, event_rows) -> list:
+    """Check aligned row lists (same sweep points, same order) against
+    each fast row's engine contract. ``event`` rows are skipped (the
+    reference cannot drift from itself). Returns violation strings
+    tagged with the offending system."""
+    violations = []
+    for fast, ev in zip(fast_rows, event_rows):
+        if fast is None or fast["engine"] == "event":
+            continue
+        contract = CONTRACTS[fast["engine"]]
+        for v in contract.check_row(fast, ev):
+            violations.append(f"{fast['system']}: {v}")
+    return violations

@@ -55,6 +55,44 @@ each round is cheaper (no per-substep WS profile, a smaller window).
 On demand traces finer than the scan's ``FLB_MIN_DT`` floor the gap
 widens by another order of magnitude.
 
+The contended-stretch coalescer (``ScanOptions(coalesce=k)``)
+----------------------------------------------------------------
+
+Long queued periods drain one completion per round above — the
+dominant remaining round count on capacity-bound grids. With
+coalescing enabled, one round absorbs up to ``k`` such events via a
+loop-free bulk section: the next ``k`` distinct completion instants
+among running lanes are extracted as iterated masked mins (a sorted
+masked top-k; a ``lax.top_k`` sort probe measured ~6× the whole
+section's cost on XLA:CPU), queue admissions at each instant resolve
+through a prefix-sum feasibility test (arrival order is lane order, so
+a pending job starts at the first instant whose cumulative freed mass
+covers the pending jobs ahead of it plus itself, or at its own submit
+time), and the policy-owned allocation integral needs no per-instant
+work at all (the share is constant across a stretch — FB reclaims only
+at rises, which bound the horizon; FLB adjusts only at ticks). The
+closed form is proven exact per round or abandoned mid-round: a
+possible first-fit leapfrog (an unstarted pending job that fits a
+conservatively over-estimated free capacity at a replayed instant or
+at its own arrival), a chain event (a batch-started job completing
+inside the round), or the ``k`` cap each end the round exactly AT the
+first such instant, where the ordinary tail replays it with the full
+``ff_passes`` first-fit and the §5.1 kill machinery — so coalesced
+results carry the SAME fidelity contract as uncoalesced rounds (the
+differential suite pins bit-equality of the job metrics).
+
+Honest perf ledger: the bulk work is masked, not branched — vmapped
+point-lanes run in lockstep, so every round pays it whether or not a
+stretch is underway. On the 2-core CI box that tax exceeds what the
+saved rounds return on the paper-density grids (max rounds/lane drops
+6258 → 4047 yet wall-clock roughly doubles at k = 8 — see the
+``rounds_coalesced`` column of results/BENCH_sweep.json), which is
+why ``DEFAULT_BATCH = 1`` leaves the coalescer OFF unless requested.
+The reduction in *rounds* — the lockstep depth — is the real asset:
+it pays where per-round cost is dominated by the lane width (wide
+accelerator batches) or where traces make event rounds sparse and
+stretches long.
+
 The queue/kill machinery is shared with the scan engine: the same
 fixed-size job window with status lanes, vectorized first-fit and §5.1
 size-class kill selection (``repro.sim.scan.fb_actions`` /
@@ -103,6 +141,7 @@ __all__ = [
     "PackedEventWorkloads", "RoundsSpec", "pack_event_workloads",
     "rounds_grids", "round_budget", "FB_ROUNDS_WINDOW",
     "FLB_ROUNDS_WINDOW", "ROUNDS_FF_PASSES", "COMPACT_EVERY",
+    "COALESCE_BATCH", "DEFAULT_BATCH",
 ]
 
 # Windows are sized to the measured unfinished-job backlog on the §6.2
@@ -112,15 +151,34 @@ __all__ = [
 # submitting jobs must already be admitted.
 FB_ROUNDS_WINDOW = 192
 FLB_ROUNDS_WINDOW = 96
-# One more first-fit pass than the scan default: with exact event times
-# a pass-convergence miss is a *start-time* error (the scan's analog is
-# a bounded one-substep delay), so spend one extra pass per round.
-ROUNDS_FF_PASSES = 3
+# The scan's pass count. PR 4 spent a third pass because a pass-
+# convergence miss at an exact event time is a start-time error; the
+# paper-grid contract was RE-MEASURED at two passes (completed jobs
+# exact on all 45 evals, node-hours <= 3.8 %, peak <= 1.3 % — identical
+# to the 3-pass ledger) and the random-trace contract tests hold, so
+# the default aligns with the scan's validated setting. With the
+# coalescer enabled the contended instants are additionally exact by
+# construction (one proven-or-deferred pass per replayed instant).
+ROUNDS_FF_PASSES = 2
 # Rounds between window compactions. Compaction is the one data-movement
 # op of the loop (a stacked lane gather); amortizing it every few rounds
 # keeps the per-round cost at reduction-dispatch level. The inner block
 # is unrolled, so this also bounds the compiled body size.
 COMPACT_EVERY = 8
+# Contended-stretch coalescing batch: with ``ScanOptions(coalesce=k)``
+# one round absorbs up to k queued-period completions (and the arrivals
+# riding the same stretch), each replayed at its exact instant by the
+# bulk section of ``round_body``. COALESCE_BATCH is the recommended
+# opt-in batch; the ENGINE default is 1 (coalescing off) because the
+# bulk's fixed vector work executes every round whether or not a
+# stretch is underway (vmapped lanes run in lockstep, so it cannot be
+# branched away), and on CPU-class hosts that tax measurably exceeds
+# the rounds it saves on the paper-density grids — the structural
+# step-count reduction pays off where per-round lockstep cost
+# dominates instead (wide accelerator batches). See the honest-perf
+# note in the module docstring and README's engine table.
+COALESCE_BATCH = 8
+DEFAULT_BATCH = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,13 +187,16 @@ class RoundsSpec:
     event-round program: the measurement horizon, the safety cap on
     rounds (the loop exits when every lane reaches the horizon — the
     cap only stops a runaway lane, see :func:`round_budget`), the job
-    window, the first-fit passes per round and the compaction cadence."""
+    window, the first-fit passes per round, the compaction cadence and
+    the contended-stretch coalescing batch (completions absorbed per
+    round while a queue exists; 1 disables coalescing)."""
 
     duration: float
     max_rounds: int
     window: int
     ff_passes: int = ROUNDS_FF_PASSES
     compact_every: int = COMPACT_EVERY
+    batch: int = DEFAULT_BATCH
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,8 +285,8 @@ def pack_event_workloads(workloads: Sequence[Tuple[Sequence[Job],
                                                                   int]]]],
                          duration: float, window: int, policy: str,
                          leases: Sequence[float], levels: Sequence[float],
-                         dtype: Optional[np.dtype] = None
-                         ) -> PackedEventWorkloads:
+                         dtype: Optional[np.dtype] = None,
+                         split: bool = False):
     """Pack ``(jobs, ws_trace)`` workloads into event-round arrays for
     one policy's sweep points.
 
@@ -234,7 +295,11 @@ def pack_event_workloads(workloads: Sequence[Tuple[Sequence[Job],
     for the values given). WS change points collapse to actual value
     changes within the horizon (the event engine ledgers nothing for a
     no-op demand event); a trailing ``+inf`` sentinel keeps gathers in
-    range after the last real change.
+    range after the last real change. With ``split=True`` the return
+    value is a LIST of single-workload packs (one per trace, identical
+    shapes since they are padded together) cut on the host — the
+    per-trace invocations of ``repro.sim.sweep`` consume these without
+    slicing a device-resident pack per workload.
     """
     dtype = resolve_pack_dtype(dtype)
     submit, size, runtime, n_jobs = pack_job_table(workloads, window, dtype)
@@ -265,16 +330,19 @@ def pack_event_workloads(workloads: Sequence[Tuple[Sequence[Job],
     for w, (r_t, r_v) in enumerate(rises):
         rise_times[w, :len(r_t)] = r_t
         rise_vals[w, :len(r_v)] = r_v
+    arrays = dict(
+        submit=submit, size=size, runtime=runtime, ws0=ws0,
+        ws_adjusts=ws_adjusts, rise_times=rise_times,
+        rise_vals=rise_vals,
+        ws_integral=np.stack(integrals).astype(dtype),
+        ws_winmax=np.stack(winmaxes).astype(dtype),
+        ws_at_tick=np.stack(at_ticks).astype(dtype), n_jobs=n_jobs)
+    if split:
+        return [PackedEventWorkloads(
+            **{k: jnp.asarray(v[w:w + 1]) for k, v in arrays.items()})
+            for w in range(W)]
     return PackedEventWorkloads(
-        submit=jnp.asarray(submit), size=jnp.asarray(size),
-        runtime=jnp.asarray(runtime),
-        ws0=jnp.asarray(ws0), ws_adjusts=jnp.asarray(ws_adjusts),
-        rise_times=jnp.asarray(rise_times),
-        rise_vals=jnp.asarray(rise_vals),
-        ws_integral=jnp.asarray(np.stack(integrals).astype(dtype)),
-        ws_winmax=jnp.asarray(np.stack(winmaxes).astype(dtype)),
-        ws_at_tick=jnp.asarray(np.stack(at_ticks).astype(dtype)),
-        n_jobs=jnp.asarray(n_jobs))
+        **{k: jnp.asarray(v) for k, v in arrays.items()})
 
 
 def round_budget(max_jobs: int, n_ws: int, duration: float,
@@ -305,6 +373,7 @@ def _simulate_rounds(policy: str, prm: Dict, pk: PackedEventWorkloads,
     ff_passes = spec.ff_passes
     K = spec.window
     R = spec.compact_every
+    batch = min(spec.batch, K)      # top-k cannot exceed the window
     tr_submit, tr_size, tr_runtime = pk.submit, pk.size, pk.runtime
     rise_times, rise_vals, ws0 = pk.rise_times, pk.rise_vals, pk.ws0
     Jp = tr_submit.shape[0]        # includes >= K pad rows (submit = +inf)
@@ -332,7 +401,7 @@ def _simulate_rounds(policy: str, prm: Dict, pk: PackedEventWorkloads,
         pool0 = owned0
 
     def actions(owned, pool_pbj, run, used, queued, wsv, is_tick, win,
-                w_sz, acc):
+                w_sz, szcls, acc):
         """The shared §5 policy step at one instant (see scan.py). The
         integrand it returns covers only the policy-owned share — the
         WS share integrates host-side (``ws_integral``) — and peaks
@@ -344,7 +413,7 @@ def _simulate_rounds(policy: str, prm: Dict, pk: PackedEventWorkloads,
         if policy == "fb":
             owned, run, starts, killed, alloc, pbj_ev = fb_actions(
                 C, owned, run, used, queued, wsv, w_sz,
-                *_size_classes(w_sz), is_tick, ff_passes)
+                *szcls, is_tick, ff_passes)
             acc["kills"] += jnp.sum(killed)
             # Window peak: owned is maximal right after the window's
             # grant, and the §5.1 ratchet owned(τ) = C − runmax(ws)
@@ -364,7 +433,7 @@ def _simulate_rounds(policy: str, prm: Dict, pk: PackedEventWorkloads,
         acc["adjusts"] += pbj_ev
         return owned, pool_pbj, run, starts, integrand, acc
 
-    def round_body(carry):
+    def round_body(carry, szcls, coalesce: bool):
         (t, owned, pool_pbj, used, has_queue, wsv, alloc_prev, rise_i,
          row_sub, w_sub, w_sz, w_rt, run, done, start_t, end_t, acc) = carry
         active = t < duration
@@ -380,32 +449,178 @@ def _simulate_rounds(policy: str, prm: Dict, pk: PackedEventWorkloads,
                                jnp.where(row_sub > t, row_sub, inf))
         k_next = jnp.floor(t / L) + 1.0
         t_tick = k_next * L
-        b0 = jnp.minimum(jnp.minimum(jnp.where(has_queue, mins[1], inf),
-                                     t_tick),
+        b0 = jnp.minimum(t_tick,
                          jnp.minimum(jnp.where(row_sub > t, row_sub, inf),
                                      dur))
         if policy == "fb":
             b0 = jnp.minimum(b0, rise_times[rise_i])
-        # --- submit skipping. Empty queue: if every submit in (t, b0]
-        # fits the currently-free capacity in aggregate (free only
-        # grows inside the horizon; the row_sub cap keeps every such
-        # submit inside the window), each starts exactly on time —
-        # retroactively, below. Non-empty queue: free is *constant*
-        # inside the horizon (starts and completions are stops then),
-        # so when even the smallest arriving job exceeds it, arrivals
-        # can only enqueue — which the derived queue encoding does with
-        # no action at all. Otherwise stop at the next submit.
+        # --- submit skipping and the contended horizon. Empty queue:
+        # if every submit in (t, b0] fits the currently-free capacity
+        # in aggregate (free only grows inside the horizon; the
+        # row_sub cap keeps every such submit inside the window), each
+        # starts exactly on time — retroactively, below; otherwise
+        # stop at the next submit. Non-empty queue with coalescing on
+        # (batch > 1): neither completions nor submits bound the
+        # horizon — the coalescer below replays a whole batch of them
+        # inside (t, b) at their exact instants (and re-clamps b when
+        # it has to stop early). With coalescing off the legacy
+        # horizon applies: stop at the earliest running-lane
+        # completion, and silently enqueue arrivals that cannot fit
+        # the (then constant) free capacity.
+        if not coalesce:
+            b0 = jnp.minimum(b0, jnp.where(has_queue, mins[1], inf))
         fresh = (w_sub > t) & (w_sub <= b0)
         sum_new = jnp.sum(jnp.where(fresh, w_sz, zero))
-        min_new = jnp.min(jnp.where(fresh, w_sz, inf))
         free = owned - used
         skip_ok = ~has_queue & (sum_new <= free)
-        enqueue_only = has_queue & (min_new > free)
-        b = jnp.where(skip_ok | enqueue_only, b0,
-                      jnp.minimum(b0, next_sub))
+        if coalesce:
+            unbounded = skip_ok | has_queue
+        else:
+            min_new = jnp.min(jnp.where(fresh, w_sz, inf))
+            unbounded = skip_ok | (has_queue & (min_new > free))
+        b = jnp.where(unbounded, b0, jnp.minimum(b0, next_sub))
         b = jnp.where(active, b, t)
-        # --- exact interval integration: the policy-owned allocation is
-        # constant on (t, b] — it only ever changes at rounds.
+        # --- the contended-stretch coalescer: while a queue existed at
+        # the round start, every completion and submit strictly inside
+        # (t, b) is an event the engine reacts to (a finish or arrival
+        # triggers the §6.5.2 first-fit), and the coalescer replays a
+        # whole batch of them in ONE round of fixed vector work:
+        #
+        #   1. masked top-k — the next `batch` distinct completion
+        #      instants among running lanes, extracted as iterated
+        #      masked mins (sorted by construction; simultaneous
+        #      completions collapse into one instant), with the freed
+        #      node mass per instant;
+        #   2. a prefix-sum feasibility test for queue admissions at
+        #      each instant: under the engine's arrival-order scan a
+        #      pending job q starts once the cumulative freed mass
+        #      covers the pending jobs ahead of it plus itself
+        #      (arrival order IS lane order, so `need` is one exclusive
+        #      prefix sum), i.e. at instant τ_{i(q)} with i(q) the
+        #      first index where freedcum ≥ need(q) — or at its own
+        #      submit time if capacity already suffices;
+        #   3. defer-on-divergence: the closed form assumes FIFO
+        #      starts. Whenever the engine's first-fit could diverge —
+        #      an unstarted pending job that FITS the (conservatively
+        #      overestimated) free capacity at some replayed instant
+        #      or at its own arrival (a leapfrog), or a batch-started
+        #      job completing inside the round (a chain event the
+        #      freed-mass ledger does not contain), or more than
+        #      `batch` instants (the cap) — the round ends exactly AT
+        #      the first such instant Θ: every extracted instant,
+        #      admission and fold before Θ stays, and the tail replays
+        #      Θ itself with the full `ff_passes` first-fit (and the
+        #      §5.1 kill machinery when Θ is a demand rise), exactly
+        #      like an uncoalesced round.
+        #
+        # Allocation integrals need no per-instant work at all: the
+        # policy-owned share is constant across the whole stretch (FB
+        # reclaims only at rises, which bound b; FLB adjusts only at
+        # ticks), so each sub-interval contributes to one rectangle.
+        # A lax.top_k sort probe was measured ~6x the cost of this
+        # whole section on XLA:CPU — hence the iterated masked mins.
+        if coalesce:
+            engaged = active & has_queue
+            run0, done0, used0, free0 = run, done, used, free
+            # (1) masked top-k completion instants inside (t, b).
+            avail = engaged & run0 & (end_t < b)
+            taus, freds = [], []
+            for _ in range(batch):
+                v = jnp.min(jnp.where(avail, end_t, inf))
+                take = avail & (end_t <= v)
+                taus.append(v)
+                freds.append(jnp.sum(jnp.where(take, w_sz, zero)))
+                avail = avail & ~take
+            frontier = jnp.min(jnp.where(avail, end_t, inf))
+            tau_v = jnp.stack(taus)                        # (k,) sorted
+            freedcum = jnp.cumsum(jnp.stack(freds))        # (k,)
+            tau_pad = jnp.concatenate([t[None], tau_v])    # idx 0 → t
+            # (2) prefix-sum admission. Pending lanes (queued now or
+            # arriving inside the round) block each other in lane
+            # (= arrival) order; inherited queue heads that already
+            # fit free0 belong to the convergence residue of the LAST
+            # round's first-fit and start retroactively at t.
+            pend = engaged & ~run0 & ~done0 & (w_sub <= b)
+            psz = jnp.where(pend, w_sz, zero)
+            need = (jnp.cumsum(psz) - psz) + w_sz - free0
+            uncov = need[:, None] > freedcum[None, :]      # (K, k)
+            idx = jnp.sum(uncov.astype(jnp.int32), axis=-1)
+            # idx = first slot whose cumulative mass covers `need`;
+            # tau_pad maps slot j to τ_j (and a non-positive need to t:
+            # capacity already sufficed, the job is last round's
+            # first-fit convergence residue or starts at its arrival).
+            start_i = jnp.where(need <= 0.0, 0,
+                                jnp.minimum(idx + 1, batch))
+            covered = pend & ((need <= 0.0) | (idx < batch))
+            start_at = jnp.where(covered,
+                                 jnp.maximum(w_sub, tau_pad[start_i]),
+                                 inf)
+            # A zero-runtime job starting AT the round start would
+            # complete instantly — freed mass the ledger below cannot
+            # carry (Θ must stay > t), which would under-estimate
+            # free_at and mask a real leapfrog. Leave such a lane to
+            # the tail's first-fit (the one-instant-late residue the
+            # contract already carries); zero-runtime starts at later
+            # instants defer naturally through the chain probe.
+            start_at = jnp.where((w_rt <= 0.0) & (start_at <= t), inf,
+                                 start_at)
+            # (3) divergence probes, all conservative (free capacity
+            # only ever OVER-estimated, so every possible first-fit
+            # leapfrog defers). started_at[j] counts admissions that
+            # happened strictly up to τ_j.
+            stsz = jnp.where(start_at < inf, w_sz, zero)
+            started_by = jnp.sum(
+                jnp.where(start_at[:, None] <= tau_v[None, :],
+                          stsz[:, None], zero), axis=0)    # (k,)
+            free_at = free0 + freedcum - started_by        # (k,)
+            fits = (pend[:, None]
+                    & (w_sub[:, None] <= tau_v[None, :])
+                    & (start_at[:, None] > tau_v[None, :])
+                    & (w_sz[:, None] <= free_at[None, :])) # (K, k)
+            leap = jnp.min(jnp.where(jnp.any(fits, axis=0), tau_v, inf))
+            # ...and at each arrival instant: net freed mass before the
+            # arrival, ignoring arrival-triggered consumption (an
+            # overestimate), one (K,k) @ (k,) contraction.
+            net = jnp.concatenate([freedcum[:1],
+                                   jnp.diff(freedcum)]) \
+                - jnp.concatenate([started_by[:1],
+                                   jnp.diff(started_by)])
+            free_arr = free0 + (tau_v[None, :]
+                                < w_sub[:, None]).astype(f) @ net
+            arr_leap = pend & (w_sub > t) & (start_at > w_sub) \
+                & (w_sz <= free_arr)
+            leap = jnp.minimum(leap, jnp.min(jnp.where(arr_leap, w_sub,
+                                                       inf)))
+            # Chain events: batch-started jobs finishing inside the
+            # round free mass the ledger above does not see.
+            chain = jnp.min(jnp.where(start_at < inf,
+                                      start_at + w_rt, inf))
+            chain = jnp.where(chain > t, chain, inf)       # 0-runtime
+            theta = jnp.minimum(jnp.minimum(leap, chain), frontier)
+            # (4) apply everything strictly before Θ; Θ itself (and
+            # anything later) belongs to the tail / next rounds.
+            cmp_c = engaged & run0 & (end_t < jnp.minimum(theta, b))
+            st_c = (start_at < jnp.minimum(theta, b))
+            cf = cmp_c.astype(f)
+            folds_c = jnp.sum(jnp.stack([cf, cf * (end_t - w_sub),
+                                         cf * (end_t - start_t),
+                                         cf * w_sz,
+                                         jnp.where(st_c, w_sz, zero)]),
+                              axis=-1)                 # one packed reduction
+            run = (run0 & ~cmp_c) | st_c
+            done = done0 | cmp_c
+            start_t = jnp.where(st_c, start_at, start_t)
+            end_t = jnp.where(st_c, start_at + w_rt, end_t)
+            used = used0 - folds_c[3] + folds_c[4]
+            acc["completed"] += folds_c[0]
+            acc["turn_sum"] += folds_c[1]
+            acc["exec_sum"] += folds_c[2]
+            acc["coalesced"] += folds_c[0]
+            b = jnp.minimum(b, theta)
+        # --- exact interval integration: the policy-owned share is
+        # constant on (t, b] — it only ever changes at policy actions,
+        # which happen at rounds (ticks, rises), never at coalesced
+        # completions or starts.
         acc["node_seconds"] += alloc_prev * jnp.maximum(b - t, 0.0)
         # --- retroactive starts at exact submit times.
         starting = (w_sub > t) & (w_sub <= b) & ~run & ~done & skip_ok
@@ -440,7 +655,7 @@ def _simulate_rounds(policy: str, prm: Dict, pk: PackedEventWorkloads,
         wsv = jnp.where(is_tick, ws_at_tick[win], wsv)
         owned, pool_pbj, run, starts, integrand, acc = actions(
             owned, pool_pbj, run, used, queued, wsv, is_tick, win, w_sz,
-            acc)
+            szcls, acc)
         start_t = jnp.where(starts, b, start_t)
         end_t = jnp.where(starts, b + w_rt, end_t)
         # Recompute the queue and usage from the POST-action lane state:
@@ -496,8 +711,12 @@ def _simulate_rounds(policy: str, prm: Dict, pk: PackedEventWorkloads,
         inner = (t, owned, pool_pbj, used, has_queue, wsv, alloc_prev,
                  rise_i, row_sub, w_sub, w_sz, w_rt, run, done, start_t,
                  end_t, acc)
+        # The FB kill size classes depend only on the window contents,
+        # which change at compactions — computed once per chunk, not
+        # once per round.
+        szcls = _size_classes(w_sz)
         for _ in range(R):      # unrolled: XLA fuses across the rounds
-            inner = round_body(inner)
+            inner = round_body(inner, szcls, coalesce=batch > 1)
         (t, owned, pool_pbj, used, has_queue, wsv, alloc_prev, rise_i,
          row_sub, w_sub, w_sz, w_rt, run, done, start_t, end_t,
          acc) = inner
@@ -511,14 +730,16 @@ def _simulate_rounds(policy: str, prm: Dict, pk: PackedEventWorkloads,
     # actions() starts at window 1).
     acc = {k: zero for k in
            ("completed", "turn_sum", "exec_sum", "kills", "node_seconds",
-            "peak", "pbj_adjusts", "adjusts", "window_overflow", "rounds")}
+            "peak", "pbj_adjusts", "adjusts", "window_overflow", "rounds",
+            "coalesced")}
     w_sub = tr_submit[:K]
     w_sz = tr_size[:K]
     w_rt = tr_runtime[:K]
     queued0 = w_sub <= 0.0
     owned, pool_pbj, run, starts0, alloc0, acc = actions(
         owned0, pool0, jnp.zeros(K, bool), zero, queued0, ws0,
-        jnp.asarray(False), jnp.asarray(0, jnp.int32), w_sz, acc)
+        jnp.asarray(False), jnp.asarray(0, jnp.int32), w_sz,
+        _size_classes(w_sz), acc)
     if policy == "fb":
         acc["peak"] = jnp.maximum(acc["peak"],
                                   jnp.minimum(owned + ws_winmax[0], C))
@@ -550,6 +771,7 @@ def _simulate_rounds(policy: str, prm: Dict, pk: PackedEventWorkloads,
         "kills": acc["kills"],
         "window_overflow": acc["window_overflow"],
         "rounds": acc["rounds"],
+        "coalesced": acc["coalesced"],
         "truncated": (t_end < duration).astype(f),
     }
 

@@ -147,8 +147,16 @@ class ScanOptions:
     grid's shortest lease and, for FLB-NUB, by the workloads' WS
     change-point spacing. The rounds engine has no substep — ``dt`` and
     ``chunk_len`` only affect ``mode="scan"``. ``ff_passes=None`` takes
-    each engine's default (2 for the scan, 3 for the rounds engine).
-    ``devices`` selects the execution backend
+    the engines' shared default (2 filtered-prefix passes; the rounds
+    coalescer's drain instants are exact-or-deferred regardless).
+    ``coalesce`` is the rounds engine's contended-stretch batch — up to
+    that many queued-period completions (plus the arrivals riding the
+    same stretch) fold into one event round, each replayed at its
+    exact instant; ``repro.sim.rounds.COALESCE_BATCH`` (8) is the
+    recommended opt-in value, 1 (the default) leaves one round per
+    contended completion — on CPU hosts the coalescer's fixed per-
+    round vector work measurably outweighs the rounds it saves, see
+    the rounds module docstring. The scan path ignores it. ``devices`` selects the execution backend
     (``repro.compat.resolve_devices``): ``None`` runs the whole grid on
     one device, a count or device sequence shards the (point × trace)
     lanes across host devices via ``shard_map``."""
@@ -157,6 +165,7 @@ class ScanOptions:
     window: Optional[int] = None
     chunk_len: Optional[int] = None
     ff_passes: Optional[int] = None
+    coalesce: Optional[int] = None
     dtype: Optional[np.dtype] = None
     devices: compat.Devices = None
 
@@ -188,11 +197,15 @@ class ScanOptions:
                    else roundslib.FLB_ROUNDS_WINDOW))
         ff = (self.ff_passes if self.ff_passes is not None
               else roundslib.ROUNDS_FF_PASSES)
+        batch = (self.coalesce if self.coalesce is not None
+                 else roundslib.DEFAULT_BATCH)
+        if batch < 1:
+            raise ValueError(f"coalesce batch must be >= 1, got {batch}")
         return roundslib.RoundsSpec(
             duration=duration,
             max_rounds=roundslib.round_budget(max_jobs, n_ws, duration,
                                               min(leases)),
-            window=window, ff_passes=ff)
+            window=window, ff_passes=ff, batch=batch)
 
 
 def _build(p: SweepPoint):
@@ -359,7 +372,7 @@ def _flb_grid(points: List[SweepPoint], idxs: List[int],
         lease=jnp.asarray([points[i].lease_seconds for i in idxs], f))
 
 
-_DIAG_KEYS = ("window_overflow", "truncated")
+_DIAG_KEYS = ("window_overflow", "truncated", "rounds", "coalesced")
 
 
 def _assemble_rows(points: List[SweepPoint], fb_idx: List[int],
@@ -488,32 +501,30 @@ def _sweep_rounds(points: List[SweepPoint],
     max_jobs = max(len(jobs) for jobs, _ in workloads)
     n_ws = max(len(ws) for _, ws in workloads)
 
-    fb = flb = fb_packed = flb_packed = fb_spec = flb_spec = None
+    fb = flb = fb_packs = flb_packs = fb_spec = flb_spec = None
     if fb_idx:
         leases = [points[i].lease_seconds for i in fb_idx]
         fb_spec = options.resolve_rounds("fb", leases, duration,
                                          max_jobs, n_ws)
-        fb_packed = roundslib.pack_event_workloads(
+        fb_packs = roundslib.pack_event_workloads(
             workloads, duration, fb_spec.window, "fb", leases,
             [float(points[i].capacity) for i in fb_idx],
-            dtype=options.dtype)
-        fb = _fb_grid(points, fb_idx, fb_packed.submit.dtype)
+            dtype=options.dtype, split=True)
+        fb = _fb_grid(points, fb_idx, fb_packs[0].submit.dtype)
     if flb_idx:
         leases = [points[i].lease_seconds for i in flb_idx]
         flb_spec = options.resolve_rounds("flb_nub", leases, duration,
                                           max_jobs, n_ws)
-        flb_packed = roundslib.pack_event_workloads(
+        flb_packs = roundslib.pack_event_workloads(
             workloads, duration, flb_spec.window, "flb_nub", leases,
             [float(points[i].lb_ws) for i in flb_idx],
-            dtype=options.dtype)
-        flb = _flb_grid(points, flb_idx, flb_packed.submit.dtype)
+            dtype=options.dtype, split=True)
+        flb = _flb_grid(points, flb_idx, flb_packs[0].submit.dtype)
 
-    row1 = lambda tree, w: jax.tree_util.tree_map(
-        lambda a: a[w:w + 1], tree)
     outs = [roundslib.rounds_grids(
         fb, flb,
-        row1(fb_packed, w) if fb_packed is not None else None,
-        row1(flb_packed, w) if flb_packed is not None else None,
+        fb_packs[w] if fb_packs is not None else None,
+        flb_packs[w] if flb_packs is not None else None,
         fb_spec=fb_spec, flb_spec=flb_spec, devices=options.devices)
         for w in range(len(workloads))]
     outs = jax.tree_util.tree_map(np.asarray, outs)

@@ -2,6 +2,8 @@
 
 import pytest
 
+pytestmark = pytest.mark.tier1
+
 from repro.core.cluster import Cluster, LedgerError, ceil_to_lease
 from repro.core.jobs import Job, JobQueue, RunningSet
 from repro.core.pbj_manager import PBJManager, PBJPolicyParams

@@ -10,6 +10,8 @@ import textwrap
 
 import pytest
 
+pytestmark = [pytest.mark.slow, pytest.mark.sharded_subprocess]
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

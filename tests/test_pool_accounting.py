@@ -17,6 +17,8 @@ import random
 
 import pytest
 
+pytestmark = pytest.mark.tier1
+
 from repro.core.jobs import Job
 from repro.core.pbj_manager import PBJManager, PBJPolicyParams
 from repro.core.provision import POOL, FLBNUBProvisionService

@@ -17,6 +17,8 @@ import warnings
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.tier1
+
 from repro.core.jobs import Job
 from repro.sim.engine import build_fb, build_flb_nub, clone_jobs, run_sim
 from repro.sim.sweep import ScanOptions, SweepPoint, run_sweep
@@ -240,7 +242,12 @@ def test_rounds_batches_trace_axis():
             assert rows[w][i]["engine"] == "rounds"
             if i == 0 and w == 0:
                 assert rows[w][i]["completed_jobs"] == ref.completed_jobs
-    assert rows[0][0]["node_hours"] != rows[1][0]["node_hours"]
+    # The traces differ (40 vs 25 jobs), so per-workload job metrics
+    # must too. (FB node-hours would NOT discriminate here: with flat
+    # WS demand the §5.1 allocation is exactly C around the clock for
+    # any job trace.)
+    assert rows[0][0]["completed_jobs"] != rows[1][0]["completed_jobs"]
+    assert rows[0][0]["avg_turnaround"] != rows[1][0]["avg_turnaround"]
 
 
 # ------------------------------------------------------ pick_dt edges

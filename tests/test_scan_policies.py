@@ -19,6 +19,8 @@ import random
 
 import pytest
 
+pytestmark = pytest.mark.tier1
+
 from repro.core.jobs import Job
 from repro.sim.engine import build_fb, build_flb_nub, clone_jobs, run_sim
 from repro.sim.sweep import ScanOptions, SweepPoint, run_sweep

@@ -10,6 +10,8 @@ piecewise-constant integral in different association orders).
 
 import pytest
 
+pytestmark = pytest.mark.tier1
+
 from repro.sim import traces
 from repro.sim.engine import run_sim
 from repro.sim.sweep import (SweepPoint, _build, paper_grid, run_sweep,

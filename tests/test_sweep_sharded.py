@@ -16,27 +16,69 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+pytestmark = pytest.mark.tier1
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Every subprocess FIRST asserts the device count it was forced to —
+# the resolved count, through the same repro.compat.resolve_devices the
+# sweep backends use. If the XLA flag is ignored (a jax upgrade, a
+# conflicting XLA_FLAGS from the outer environment, a platform that
+# pins one device) the test FAILS with the resolution error instead of
+# silently exercising the single-device path and reporting green.
+_DEVICE_PREAMBLE = """
+    import jax
+    from repro.compat import resolve_devices
+    devs = resolve_devices(2)
+    assert devs is not None and len(devs) == 2, (
+        "forced host device count not honored: resolved %r from %r"
+        % (devs, jax.devices()))
+    assert len(jax.devices()) == 2, jax.devices()
+"""
 
 
 def _run2(code: str) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=420)
+    out = subprocess.run(
+        [sys.executable, "-c",
+         textwrap.dedent(_DEVICE_PREAMBLE) + textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=420)
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
 
 
+@pytest.mark.slow
+@pytest.mark.sharded_subprocess
+def test_forced_device_count_is_asserted_inside_the_subprocess():
+    """The skip-surface fix: a subprocess whose device resolution falls
+    back to 1 must FAIL (returncode != 0 with the resolution message),
+    never skip — exercised by running the same preamble WITHOUT the
+    XLA flag."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)          # no forced devices
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_DEVICE_PREAMBLE)],
+        capture_output=True, text=True, env=env, timeout=420)
+    if out.returncode == 0:             # multi-device host: flag moot
+        import jax
+        assert len(jax.devices()) >= 2
+    else:
+        assert ("xla_force_host_platform_device_count" in out.stderr
+                or "not honored" in out.stderr), out.stderr[-2000:]
+
+
+@pytest.mark.slow
+@pytest.mark.sharded_subprocess
 def test_sharded_matches_single_device_on_odd_lane_count():
     """3 workloads × 3 points per policy = 9 lanes — NOT divisible by 2
     devices, so both policies pad one lane and must drop it from the
     reported rows."""
     out = _run2("""
-        import jax
-        assert len(jax.devices()) == 2, jax.devices()
         from repro.sim import traces
         from repro.sim.sweep import SweepPoint, run_sweep_workloads
 
@@ -76,6 +118,23 @@ def test_sharded_matches_single_device_on_odd_lane_count():
             for i, (a, b) in enumerate(zip(ra, rb)) if a != b][:3]
         assert all(r["engine"] == "rounds" for row in sharded_r
                    for r in row[:-1])
+        # ...and for the contended-stretch COALESCED variant: its bulk
+        # section adds (K, k) intermediates to the per-lane program,
+        # which must shard exactly like the plain one (this is the only
+        # place the coalesce x shard_map combination is exercised — the
+        # bench gate's sharded leg covers plain rounds only).
+        from repro.sim.sweep import ScanOptions
+        co = ScanOptions(coalesce=8)
+        single_c = run_sweep_workloads(pts, wls, T, mode="rounds",
+                                       scan_options=co)
+        sharded_c = run_sweep_workloads(pts, wls, T, mode="rounds",
+                                        scan_options=co, devices=2)
+        assert sharded_c == single_c, [
+            (w, i, a, b)
+            for w, (ra, rb) in enumerate(zip(single_c, sharded_c))
+            for i, (a, b) in enumerate(zip(ra, rb)) if a != b][:3]
+        assert sum(r.get("coalesced", 0) for row in single_c
+                   for r in row) > 0
         print("OK")
     """)
     assert "OK" in out

@@ -6,6 +6,10 @@ FB provisioning against the consolidated iPSC+WorldCup workload →
 the paper's headline metrics, all in one process.
 """
 
+import pytest
+
+pytestmark = pytest.mark.tier1
+
 import numpy as np
 
 from repro.core.lifecycle import LifecycleManagementService, TREState

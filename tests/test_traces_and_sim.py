@@ -3,6 +3,8 @@
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.tier1
+
 from repro.sim import traces
 from repro.sim.engine import (build_dcs, build_ec2_rightscale, build_fb,
                               build_flb_nub, clone_jobs, run_sim)
