@@ -26,7 +26,16 @@ for you (all imports of jax are deferred until after the flag is in
 place, so one plain invocation measures real multi-core scaling). The
 run also asserts that no buffer-donation ("aliasing") warnings escaped
 the jitted fast paths — donation is platform-gated in ``repro.compat``
-and must stay silent on hosts without it.
+and must stay silent on hosts without it. ``--kernel pallas`` adds a
+``rounds_pallas`` column: the fused round-step backend
+(``repro.kernels.round_step``, interpret mode off-TPU) timed with
+separated ``compile_s``/``run_s`` walls and held to the same rounds
+contract plus bit-identity to the unfused rows.
+
+``python -m benchmarks.run roundstep`` is the kernel microbenchmark:
+one fused vs one unfused outer step across vmapped lane widths
+(``--lanes``), bit-equality asserted at every width, written to
+``results/BENCH_roundstep.json``.
 """
 
 import argparse
@@ -102,18 +111,23 @@ def _timed(fn, reps: int = 3):
     return max(best, 1e-6), out
 
 
-def sweep_benchmark(tiny: bool = False, devices: int = 0) -> dict:
+def sweep_benchmark(tiny: bool = False, devices: int = 0,
+                    kernel: str = "xla") -> dict:
     """Event engine vs batched scan vs event-round engine (plain and
     coalesced, vs their sharded variants when ``devices >= 2``) on the
-    paper's coordinated-policy grids. Returns the BENCH_sweep.json
-    payload."""
+    paper's coordinated-policy grids. ``kernel="pallas"`` ADDS a
+    ``rounds_pallas`` column — the fused round-step backend timed and
+    fidelity-gated alongside the regular engines (its rows must be
+    bit-identical to the unfused rounds rows). Returns the
+    BENCH_sweep.json payload."""
     import warnings
 
     import jax
     from repro import compat
     from repro.sim import traces
     from repro.core.profiles import scale_profile
-    from repro.sim.sweep import ScanOptions, SweepPoint, run_sweep_workloads
+    from repro.sim.sweep import (ScanOptions, SweepPoint,
+                                 run_sweep_workloads, warmup_sweep)
 
     if devices:
         # Fail before the (minutes-long) event baseline, with the single
@@ -175,42 +189,61 @@ def sweep_benchmark(tiny: bool = False, devices: int = 0) -> dict:
 
     # Any donation ("aliasing") warning from the jitted fast paths means
     # the compat platform gate failed — record them and gate below.
+    pallas_opts = (ScanOptions(kernel="pallas") if kernel == "pallas"
+                   else None)
+
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
 
-        t0 = time.time()
-        run_sweep_workloads(points, workloads, horizon, mode="scan")
-        scan_compile = time.time() - t0
+        scan_compile = warmup_sweep(points, workloads, horizon,
+                                    mode="scan")
         scan_wall, scan_rows = _timed(lambda: run_sweep_workloads(
             points, workloads, horizon, mode="scan"))
 
-        t0 = time.time()
-        run_sweep_workloads(points, workloads, horizon, mode="rounds")
-        rounds_compile = time.time() - t0
+        rounds_compile = warmup_sweep(points, workloads, horizon,
+                                      mode="rounds")
         rounds_wall, rounds_rows = _timed(lambda: run_sweep_workloads(
             points, workloads, horizon, mode="rounds"))
 
-        run_sweep_workloads(points, workloads, horizon, mode="rounds",
-                            scan_options=coalesce_opts)
+        coal_compile = warmup_sweep(points, workloads, horizon,
+                                    mode="rounds",
+                                    scan_options=coalesce_opts)
         coal_wall, coal_rows = _timed(lambda: run_sweep_workloads(
             points, workloads, horizon, mode="rounds",
             scan_options=coalesce_opts))
+
+        if pallas_opts is not None:
+            pallas_compile = warmup_sweep(points, workloads, horizon,
+                                          mode="rounds",
+                                          scan_options=pallas_opts)
+            pallas_wall, pallas_rows = _timed(lambda: run_sweep_workloads(
+                points, workloads, horizon, mode="rounds",
+                scan_options=pallas_opts))
     donation_warnings = [str(w.message) for w in caught
                          if "donat" in str(w.message).lower()
                          or "alias" in str(w.message).lower()]
 
+    def _walls(compile_plus_run, wall):
+        # compile_s is the warm-up wall minus one steady run — the jit
+        # trace + XLA (and Pallas) compile cost in isolation; the old
+        # compile_plus_run_s column stays for ledger continuity.
+        return {"compile_plus_run_s": round(compile_plus_run, 4),
+                "compile_s": round(max(compile_plus_run - wall, 0.0), 4),
+                "run_s": round(wall, 4)}
+
     out["event"] = {"wall_s": round(event_wall, 4),
                     "points_per_sec": round(n_evals / event_wall, 2)}
-    out["scan"] = {"compile_plus_run_s": round(scan_compile, 4),
+    out["scan"] = {**_walls(scan_compile, scan_wall),
                    "wall_s": round(scan_wall, 4),
                    "points_per_sec": round(n_evals / scan_wall, 2)}
-    out["rounds"] = {"compile_plus_run_s": round(rounds_compile, 4),
+    out["rounds"] = {**_walls(rounds_compile, rounds_wall),
                      "wall_s": round(rounds_wall, 4),
                      "points_per_sec": round(n_evals / rounds_wall, 2),
                      "speedup_vs_event": round(event_wall / rounds_wall, 2),
                      "speedup_vs_scan": round(scan_wall / rounds_wall, 2)}
     out["rounds_coalesced"] = {
         "coalesce_batch": COALESCE_BATCH,
+        **_walls(coal_compile, coal_wall),
         "wall_s": round(coal_wall, 4),
         "points_per_sec": round(n_evals / coal_wall, 2),
         "speedup_vs_event": round(event_wall / coal_wall, 2),
@@ -225,10 +258,27 @@ def sweep_benchmark(tiny: bool = False, devices: int = 0) -> dict:
                                 for rows_w in coal_rows
                                 for r in rows_w),
     }
+    if pallas_opts is not None:
+        from repro.kernels.ops import _default_interpret
+        out["rounds_pallas"] = {
+            **_walls(pallas_compile, pallas_wall),
+            "wall_s": round(pallas_wall, 4),
+            "points_per_sec": round(n_evals / pallas_wall, 2),
+            "speedup_vs_event": round(event_wall / pallas_wall, 2),
+            "speedup_vs_rounds": round(rounds_wall / pallas_wall, 2),
+            # Interpret mode (CPU) validates semantics, not speed — the
+            # compiled-kernel regime is GPU/TPU. Recorded so the ledger
+            # never passes an interpret wall off as a kernel wall.
+            "interpret": _default_interpret(),
+            # Both backends run the same _chunk_core math on the same
+            # inputs — any row difference is a packing bug.
+            "rows_match_rounds": pallas_rows == rounds_rows,
+        }
     out["speedup"] = round(event_wall / scan_wall, 2)
     out["donation_warnings"] = donation_warnings
 
     sharded_rows = rounds_sharded_rows = None
+    pallas_sharded_match = None
     if devices and devices >= 2:
         t0 = time.time()
         run_sweep_workloads(points, workloads, horizon, mode="scan",
@@ -240,6 +290,8 @@ def sweep_benchmark(tiny: bool = False, devices: int = 0) -> dict:
         out["scan_sharded"] = {
             "devices": devices,
             "compile_plus_run_s": round(sharded_compile, 4),
+            "compile_s": round(max(sharded_compile - sharded_wall, 0.0), 4),
+            "run_s": round(sharded_wall, 4),
             "wall_s": round(sharded_wall, 4),
             "points_per_sec": round(n_evals / sharded_wall, 2),
             "speedup_vs_event": round(event_wall / sharded_wall, 2),
@@ -259,12 +311,38 @@ def sweep_benchmark(tiny: bool = False, devices: int = 0) -> dict:
         out["rounds_sharded"] = {
             "devices": devices,
             "compile_plus_run_s": round(rsh_compile, 4),
+            "compile_s": round(max(rsh_compile - rsh_wall, 0.0), 4),
+            "run_s": round(rsh_wall, 4),
             "wall_s": round(rsh_wall, 4),
             "points_per_sec": round(n_evals / rsh_wall, 2),
             "speedup_vs_event": round(event_wall / rsh_wall, 2),
             "speedup_vs_rounds": round(rounds_wall / rsh_wall, 2),
             "rows_match_rounds": rounds_sharded_rows == rounds_rows,
         }
+        if pallas_opts is not None:
+            # The fused kernel's sharded leg: lanes split across host
+            # devices via the same sharded_grid_map (the vmapped
+            # pallas_call is just the per-lane program) — rows must stay
+            # bit-identical to the single-device fused run.
+            psh_compile = warmup_sweep(points, workloads, horizon,
+                                       mode="rounds",
+                                       scan_options=pallas_opts,
+                                       devices=devices)
+            psh_wall, psh_rows = _timed(
+                lambda: run_sweep_workloads(points, workloads, horizon,
+                                            mode="rounds",
+                                            scan_options=pallas_opts,
+                                            devices=devices), reps=2)
+            pallas_sharded_match = psh_rows == pallas_rows
+            out["rounds_pallas_sharded"] = {
+                "devices": devices,
+                "compile_plus_run_s": round(psh_compile, 4),
+                "compile_s": round(max(psh_compile - psh_wall, 0.0), 4),
+                "run_s": round(psh_wall, 4),
+                "wall_s": round(psh_wall, 4),
+                "points_per_sec": round(n_evals / psh_wall, 2),
+                "rows_match_pallas": pallas_sharded_match,
+            }
 
     out["backend"] = {"devices": [str(d) for d in jax.devices()],
                       "cpu_count": os.cpu_count()}
@@ -349,6 +427,16 @@ def sweep_benchmark(tiny: bool = False, devices: int = 0) -> dict:
     # re-timed here — True stands for "covered elsewhere".
     out["rounds_coalesced_contract_ok"] = rounds_contract_ok(
         out["rounds_coalesced_fidelity"], donation_warnings, True)
+    if pallas_opts is not None:
+        # The fused kernel answers to the SAME contract as the engine it
+        # fuses, plus bit-identity to the unfused rows (and to its own
+        # sharded run when a sharded leg was timed).
+        _, pallas_cmp = _drift(pallas_rows)
+        out["rounds_pallas_fidelity"] = _fidelity(pallas_rows, pallas_cmp)
+        out["rounds_pallas_contract_ok"] = bool(rounds_contract_ok(
+            out["rounds_pallas_fidelity"], donation_warnings,
+            pallas_sharded_match is None or pallas_sharded_match)
+            and out["rounds_pallas"]["rows_match_rounds"])
     return out
 
 
@@ -364,16 +452,24 @@ def run_sweep_bench(argv) -> int:
                     metavar="FRAC", help="exit 1 if any scan point's "
                     "completed-jobs or node-hours drift exceeds FRAC, or "
                     "the rounds contract (jobs exact, node-hours/peak "
-                    "within 5%%, sharded rows identical) fails")
+                    "within 5%%, sharded rows identical) fails — with "
+                    "--kernel pallas the fused column answers to the "
+                    "same contract plus bit-identity to unfused rows")
     ap.add_argument("--perf-gate", type=float, default=None, metavar="R",
-                    help="exit 1 if the rounds engine's steady-state "
-                    "points/sec drops below R x the scan engine's")
+                    help="exit 1 if the (unfused) rounds engine's "
+                    "steady-state points/sec drops below R x the scan "
+                    "engine's")
+    ap.add_argument("--kernel", choices=("xla", "pallas"), default="xla",
+                    help="'pallas' additionally times the fused "
+                    "round-step kernel as a rounds_pallas column "
+                    "(interpret mode off-TPU)")
     ap.add_argument("--out", default="results/BENCH_sweep.json")
     args = ap.parse_args(argv)
     if args.devices >= 2:
         from repro.hostdev import force_host_device_count
         force_host_device_count(args.devices)
-    out = sweep_benchmark(tiny=args.tiny, devices=args.devices)
+    out = sweep_benchmark(tiny=args.tiny, devices=args.devices,
+                          kernel=args.kernel)
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
@@ -391,11 +487,21 @@ def run_sweep_bench(argv) -> int:
             f"max_drift(scan)={out['max_drift']} "
             f"rounds_contract_ok={out['rounds_contract_ok']} "
             f"coalesced_contract_ok={out['rounds_coalesced_contract_ok']}")
-    for key, base in (("scan_sharded", "scan"), ("rounds_sharded",
-                                                 "rounds")):
+    if "rounds_pallas" in out:
+        rp = out["rounds_pallas"]
+        line += (f" rounds_pallas={rp['run_s']}s "
+                 f"(compile {rp['compile_s']}s, interpret "
+                 f"{rp['interpret']}, rows_match="
+                 f"{rp['rows_match_rounds']}, contract_ok="
+                 f"{out['rounds_pallas_contract_ok']})")
+    for key, base in (("scan_sharded", "scan"),
+                      ("rounds_sharded", "rounds"),
+                      ("rounds_pallas_sharded", "rounds_pallas")):
         if key in out:
             sh = out[key]
-            match = sh.get("rows_match_scan", sh.get("rows_match_rounds"))
+            match = sh.get("rows_match_scan",
+                           sh.get("rows_match_rounds",
+                                  sh.get("rows_match_pallas")))
             line += (f" {key}[{sh['devices']}]={sh['wall_s']}s "
                      f"({sh['points_per_sec']} pts/s, rows_match={match})")
     print(line)
@@ -415,6 +521,12 @@ def run_sweep_bench(argv) -> int:
             print(f"COALESCED ROUNDS CONTRACT FAILED: "
                   f"{out['rounds_coalesced_fidelity']}", file=sys.stderr)
             rc = 1
+        if "rounds_pallas" in out and not out["rounds_pallas_contract_ok"]:
+            print(f"PALLAS ROUNDS CONTRACT FAILED: "
+                  f"{out['rounds_pallas_fidelity']} rows_match="
+                  f"{out['rounds_pallas']['rows_match_rounds']}",
+                  file=sys.stderr)
+            rc = 1
     if args.perf_gate is not None:
         ratio = rd["points_per_sec"] / max(out["scan"]["points_per_sec"],
                                            1e-9)
@@ -423,6 +535,103 @@ def run_sweep_bench(argv) -> int:
                   f"below the {args.perf_gate}x gate", file=sys.stderr)
             rc = 1
     return rc
+
+
+def roundstep_benchmark(lane_widths=(1, 4, 16, 64), reps: int = 3) -> dict:
+    """Microbenchmark of the fused Pallas round-step kernel vs the
+    unfused traced body: ONE outer step (compaction + admission + the
+    ``compact_every`` unrolled rounds) on a real packed trace lane,
+    vmapped across ``lane_widths`` lane counts — the per-op dispatch
+    floor the fusion attacks, isolated from the while_loop. Also
+    asserts the two backends' packed outputs are bit-identical at every
+    width. Returns the BENCH_roundstep.json payload."""
+    import numpy as np
+
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import round_step as rsk
+    from repro.kernels.ops import _default_interpret
+    from repro.sim import rounds as roundslib
+    from repro.sim import traces
+
+    horizon = 2 * 24 * 3600.0
+    jobs = [j for j in traces.nasa_ipsc(seed=0) if j.submit < horizon]
+    ws = [(t, d) for t, d in traces.worldcup98(seed=0, peak_vms=64)
+          if t < horizon]
+    K = roundslib.FB_ROUNDS_WINDOW
+    spec = roundslib.RoundsSpec(
+        duration=horizon,
+        max_rounds=roundslib.round_budget(len(jobs), len(ws), horizon,
+                                          3600.0),
+        window=K, kernel="pallas")
+    pk = jax.tree_util.tree_map(
+        lambda a: a[0], roundslib.pack_event_workloads(
+            [(jobs, ws)], horizon, K, "fb", leases=[3600.0], levels=[96]))
+    prm = {"lease": jnp.asarray(3600.0, pk.submit.dtype),
+           "capacity": jnp.asarray(96.0, pk.submit.dtype),
+           "p_idx": jnp.asarray(0, jnp.int32)}
+    ctx = roundslib._lane_ctx("fb", prm, pk)
+    inputs = rsk.lane_inputs("fb", ctx)
+    f = pk.submit.dtype
+    zero = jnp.zeros((), f)
+    acc = {k: zero for k in roundslib.ACC_KEYS}
+    core0 = (zero, jnp.asarray(64.0, f), zero, zero,
+             jnp.asarray(False), pk.ws0, jnp.asarray(64.0, f),
+             jnp.asarray(0, jnp.int32), jnp.asarray(K, jnp.int32),
+             pk.submit[:K], pk.size[:K], pk.runtime[:K],
+             jnp.zeros(K, bool), jnp.zeros(K, bool), jnp.zeros(K, f),
+             jnp.zeros(K, f), acc)
+    sc1, win1 = rsk.pack_carry(core0)
+
+    def step(fn):
+        return jax.jit(jax.vmap(
+            lambda sc, win: fn(*inputs, sc, win, policy="fb", spec=spec),
+            in_axes=(0, 0)))
+
+    fused, ref = step(rsk.chunk_step), step(rsk.chunk_step_ref)
+    out = {"window": K, "compact_every": spec.compact_every,
+           "interpret": _default_interpret(), "policy": "fb",
+           "trace_jobs": len(jobs), "widths": []}
+    for n in lane_widths:
+        sc = jnp.broadcast_to(sc1, (n,) + sc1.shape)
+        win = jnp.broadcast_to(win1, (n,) + win1.shape)
+        row = {"lanes": int(n)}
+        results = {}
+        for name, fn in (("fused", fused), ("ref", ref)):
+            t0 = time.time()
+            r = jax.block_until_ready(fn(sc, win))
+            row[f"{name}_compile_plus_run_s"] = round(time.time() - t0, 4)
+            wall, r = _timed(lambda: jax.block_until_ready(fn(sc, win)),
+                             reps=reps)
+            row[f"{name}_run_s"] = round(wall, 5)
+            results[name] = r
+        row["bit_equal"] = all(
+            bool(jnp.array_equal(a, b)) for a, b in
+            zip(jax.tree_util.tree_leaves(results["fused"]),
+                jax.tree_util.tree_leaves(results["ref"])))
+        row["fused_vs_ref"] = round(
+            row["ref_run_s"] / max(row["fused_run_s"], 1e-9), 2)
+        out["widths"].append(row)
+    return out
+
+
+def run_roundstep_bench(argv) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.run roundstep")
+    ap.add_argument("--lanes", type=int, nargs="+",
+                    default=[1, 4, 16, 64], metavar="N",
+                    help="vmapped lane counts to time")
+    ap.add_argument("--out", default="results/BENCH_roundstep.json")
+    args = ap.parse_args(argv)
+    out = roundstep_benchmark(lane_widths=tuple(args.lanes))
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as fjson:
+        json.dump(out, fjson, indent=1)
+    for row in out["widths"]:
+        print(f"lanes={row['lanes']} fused={row['fused_run_s']}s "
+              f"ref={row['ref_run_s']}s ({row['fused_vs_ref']}x, "
+              f"bit_equal={row['bit_equal']})")
+    print(f"# interpret={out['interpret']} -> {args.out}")
+    return 0 if all(r["bit_equal"] for r in out["widths"]) else 1
 
 
 def main() -> None:
@@ -456,4 +665,6 @@ def main() -> None:
 if __name__ == "__main__":
     if len(sys.argv) > 1 and sys.argv[1] == "sweep":
         sys.exit(run_sweep_bench(sys.argv[2:]))
+    if len(sys.argv) > 1 and sys.argv[1] == "roundstep":
+        sys.exit(run_roundstep_bench(sys.argv[2:]))
     main()

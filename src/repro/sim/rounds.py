@@ -175,8 +175,15 @@ COMPACT_EVERY = 8
 # branched away), and on CPU-class hosts that tax measurably exceeds
 # the rounds it saves on the paper-density grids — the structural
 # step-count reduction pays off where per-round lockstep cost
-# dominates instead (wide accelerator batches). See the honest-perf
-# note in the module docstring and README's engine table.
+# dominates instead (wide accelerator batches). Re-measured under the
+# fused Pallas round-step kernel (kernel="pallas", coalesce=8, the
+# 45-eval paper grids): still a net loss on CPU — 8.7 s vs 4.0 s
+# plain-fused despite max rounds dropping 6258 -> 4047, because the
+# bulk's lockstep vector work runs inside the kernel too and interpret
+# mode executes it per-op per-lane. The verdict stands until a
+# compiled-kernel accelerator measurement says otherwise, so
+# DEFAULT_BATCH stays 1. See the honest-perf note in the module
+# docstring and README's engine table.
 COALESCE_BATCH = 8
 DEFAULT_BATCH = 1
 
@@ -189,7 +196,18 @@ class RoundsSpec:
     cap only stops a runaway lane, see :func:`round_budget`), the job
     window, the first-fit passes per round, the compaction cadence and
     the contended-stretch coalescing batch (completions absorbed per
-    round while a queue exists; 1 disables coalescing)."""
+    round while a queue exists; 1 disables coalescing).
+
+    ``kernel`` selects the round-step backend: ``"xla"`` (default) runs
+    the outer-loop body as plain traced jnp ops; ``"pallas"`` fuses the
+    whole body — compaction, admission, size classes and the unrolled
+    ``compact_every`` rounds — into one Pallas kernel per lane
+    (``repro.kernels.round_step``), with interpret mode auto-selected
+    off-TPU. Both backends execute the SAME ``_chunk_core`` math, so
+    their rows are bit-identical (tests/test_round_step_kernel.py).
+    The field is part of the spec hash, so the jit caches key on
+    ``(policy, spec-incl-kernel)`` and switching backends never reuses
+    a stale compiled program."""
 
     duration: float
     max_rounds: int
@@ -197,6 +215,13 @@ class RoundsSpec:
     ff_passes: int = ROUNDS_FF_PASSES
     compact_every: int = COMPACT_EVERY
     batch: int = DEFAULT_BATCH
+    kernel: str = "xla"
+
+    def __post_init__(self):
+        if self.kernel not in ("xla", "pallas"):
+            raise ValueError(
+                f"unknown rounds kernel {self.kernel!r}; expected "
+                f"\"xla\" or \"pallas\"")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -361,391 +386,447 @@ def round_budget(max_jobs: int, n_ws: int, duration: float,
 
 # ------------------------------------------------------------- the rounds core
 
+# The loop's metric accumulators, in the FIXED order the fused kernel
+# packs them into its scalar state vector (repro.kernels.round_step) —
+# both backends build the acc dict from this tuple.
+ACC_KEYS = ("completed", "turn_sum", "exec_sum", "kills", "node_seconds",
+            "peak", "pbj_adjusts", "adjusts", "window_overflow", "rounds",
+            "coalesced")
+
+
+def _lane_ctx(policy: str, prm: Dict, pk: PackedEventWorkloads) -> Dict:
+    """One lane's traced round-body inputs as a flat dict — the job
+    table, the FB demand-rise stops, the per-point WS fold tables and
+    the policy scalars. The XLA path builds it from the packed pytree;
+    the fused kernel rebuilds the IDENTICAL dict from its input refs
+    (``repro.kernels.round_step._ctx_from_inputs``), so both backends
+    feed the same values through the same ``_chunk_core`` math."""
+    f = pk.submit.dtype
+    p_idx = prm["p_idx"]
+    ctx = {
+        "L": prm["lease"].astype(f),
+        "tr_submit": pk.submit, "tr_size": pk.size,
+        "tr_runtime": pk.runtime,
+        "rise_times": pk.rise_times, "rise_vals": pk.rise_vals,
+        "ws_winmax": pk.ws_winmax[p_idx],    # (NT,) WS-share window max
+        "ws_at_tick": pk.ws_at_tick[p_idx],  # (NT,) demand at boundaries
+    }
+    if policy == "fb":
+        ctx["C"] = prm["capacity"].astype(f)
+    else:
+        ctx["B"] = prm["B"].astype(f)
+        ctx["lb_ws"] = prm["lb_ws"].astype(f)
+        ctx["U"], ctx["V"], ctx["G"] = (prm[k].astype(f)
+                                        for k in ("U", "V", "G"))
+    return ctx
+
+
+def _actions(policy: str, ctx: Dict, ff_passes: int, owned, pool_pbj,
+             run, used, queued, wsv, is_tick, win, w_sz, szcls, acc):
+    """The shared §5 policy step at one instant (see scan.py). The
+    integrand it returns covers only the policy-owned share — the
+    WS share integrates host-side (``ws_integral``) — and peaks
+    fold per lease window: the policy share is constant inside one
+    (FB reclaims only at demand-rise stops, which ratchet it down
+    monotonically after the window's grant; FLB adjusts only at
+    ticks), so combining it with the precomputed WS-share window
+    max is exact without stopping at demand changes."""
+    ws_winmax = ctx["ws_winmax"]
+    if policy == "fb":
+        C = ctx["C"]
+        owned, run, starts, killed, alloc, pbj_ev = fb_actions(
+            C, owned, run, used, queued, wsv, w_sz,
+            *szcls, is_tick, ff_passes)
+        acc["kills"] += jnp.sum(killed)
+        # Window peak: owned is maximal right after the window's
+        # grant, and the §5.1 ratchet owned(τ) = C − runmax(ws)
+        # makes the in-window alloc max exactly min(owned + M, C).
+        peak_cand = jnp.minimum(owned + ws_winmax[win], C)
+        integrand = owned
+    else:
+        owned, pool_pbj, run, starts, alloc, pbj_ev = flb_actions(
+            ctx["B"], ctx["lb_ws"], ctx["U"], ctx["V"], ctx["G"],
+            owned, pool_pbj, run, used, queued, wsv, w_sz, is_tick,
+            ff_passes)
+        leased = ctx["B"] + jnp.maximum(owned - pool_pbj, 0.0)
+        peak_cand = leased + ws_winmax[win]
+        integrand = leased
+    acc["peak"] = jnp.maximum(acc["peak"],
+                              jnp.where(is_tick, peak_cand, -jnp.inf))
+    acc["pbj_adjusts"] += pbj_ev
+    acc["adjusts"] += pbj_ev
+    return owned, pool_pbj, run, starts, integrand, acc
+
+
+def _round_body(policy: str, ctx: Dict, spec: RoundsSpec, carry, szcls):
+    """One event round over the window lanes — pure jnp on the carry,
+    shared verbatim by the XLA outer loop and the fused Pallas kernel
+    (see the module docstring for the event semantics)."""
+    (t, owned, pool_pbj, used, has_queue, wsv, alloc_prev, rise_i,
+     row_sub, w_sub, w_sz, w_rt, run, done, start_t, end_t, acc) = carry
+    duration = spec.duration
+    K = w_sub.shape[0]
+    batch = min(spec.batch, K)      # top-k cannot exceed the window
+    coalesce = batch > 1
+    f = w_sub.dtype
+    inf = jnp.asarray(jnp.inf, f)
+    zero = jnp.zeros((), f)
+    one = jnp.ones((), f)
+    dur = jnp.asarray(duration, f)
+    L = ctx["L"]
+    rise_times, rise_vals = ctx["rise_times"], ctx["rise_vals"]
+    ws_at_tick = ctx["ws_at_tick"]
+    NT = ctx["ws_winmax"].shape[0]
+    active = t < duration
+    # --- the next event horizon. Every candidate is strictly > t,
+    # so the loop always progresses; a finished lane pins b = t and
+    # becomes a no-op. Completions bound the horizon only while the
+    # queue is non-empty (they can then start queued work);
+    # otherwise they fold retroactively below, at exact times.
+    mins = jnp.min(jnp.stack([jnp.where(w_sub > t, w_sub, inf),
+                              jnp.where(run, end_t, inf)]),
+                   axis=-1)                      # one packed reduction
+    next_sub = jnp.minimum(mins[0],
+                           jnp.where(row_sub > t, row_sub, inf))
+    k_next = jnp.floor(t / L) + 1.0
+    t_tick = k_next * L
+    b0 = jnp.minimum(t_tick,
+                     jnp.minimum(jnp.where(row_sub > t, row_sub, inf),
+                                 dur))
+    if policy == "fb":
+        b0 = jnp.minimum(b0, rise_times[rise_i])
+    # --- submit skipping and the contended horizon. Empty queue:
+    # if every submit in (t, b0] fits the currently-free capacity
+    # in aggregate (free only grows inside the horizon; the
+    # row_sub cap keeps every such submit inside the window), each
+    # starts exactly on time — retroactively, below; otherwise
+    # stop at the next submit. Non-empty queue with coalescing on
+    # (batch > 1): neither completions nor submits bound the
+    # horizon — the coalescer below replays a whole batch of them
+    # inside (t, b) at their exact instants (and re-clamps b when
+    # it has to stop early). With coalescing off the legacy
+    # horizon applies: stop at the earliest running-lane
+    # completion, and silently enqueue arrivals that cannot fit
+    # the (then constant) free capacity.
+    if not coalesce:
+        b0 = jnp.minimum(b0, jnp.where(has_queue, mins[1], inf))
+    fresh = (w_sub > t) & (w_sub <= b0)
+    sum_new = jnp.sum(jnp.where(fresh, w_sz, zero))
+    free = owned - used
+    skip_ok = ~has_queue & (sum_new <= free)
+    if coalesce:
+        unbounded = skip_ok | has_queue
+    else:
+        min_new = jnp.min(jnp.where(fresh, w_sz, inf))
+        unbounded = skip_ok | (has_queue & (min_new > free))
+    b = jnp.where(unbounded, b0, jnp.minimum(b0, next_sub))
+    b = jnp.where(active, b, t)
+    # --- the contended-stretch coalescer: while a queue existed at
+    # the round start, every completion and submit strictly inside
+    # (t, b) is an event the engine reacts to (a finish or arrival
+    # triggers the §6.5.2 first-fit), and the coalescer replays a
+    # whole batch of them in ONE round of fixed vector work:
+    #
+    #   1. masked top-k — the next `batch` distinct completion
+    #      instants among running lanes, extracted as iterated
+    #      masked mins (sorted by construction; simultaneous
+    #      completions collapse into one instant), with the freed
+    #      node mass per instant;
+    #   2. a prefix-sum feasibility test for queue admissions at
+    #      each instant: under the engine's arrival-order scan a
+    #      pending job q starts once the cumulative freed mass
+    #      covers the pending jobs ahead of it plus itself
+    #      (arrival order IS lane order, so `need` is one exclusive
+    #      prefix sum), i.e. at instant τ_{i(q)} with i(q) the
+    #      first index where freedcum ≥ need(q) — or at its own
+    #      submit time if capacity already suffices;
+    #   3. defer-on-divergence: the closed form assumes FIFO
+    #      starts. Whenever the engine's first-fit could diverge —
+    #      an unstarted pending job that FITS the (conservatively
+    #      overestimated) free capacity at some replayed instant
+    #      or at its own arrival (a leapfrog), or a batch-started
+    #      job completing inside the round (a chain event the
+    #      freed-mass ledger does not contain), or more than
+    #      `batch` instants (the cap) — the round ends exactly AT
+    #      the first such instant Θ: every extracted instant,
+    #      admission and fold before Θ stays, and the tail replays
+    #      Θ itself with the full `ff_passes` first-fit (and the
+    #      §5.1 kill machinery when Θ is a demand rise), exactly
+    #      like an uncoalesced round.
+    #
+    # Allocation integrals need no per-instant work at all: the
+    # policy-owned share is constant across the whole stretch (FB
+    # reclaims only at rises, which bound b; FLB adjusts only at
+    # ticks), so each sub-interval contributes to one rectangle.
+    # A lax.top_k sort probe was measured ~6x the cost of this
+    # whole section on XLA:CPU — hence the iterated masked mins.
+    if coalesce:
+        engaged = active & has_queue
+        run0, done0, used0, free0 = run, done, used, free
+        # (1) masked top-k completion instants inside (t, b).
+        avail = engaged & run0 & (end_t < b)
+        taus, freds = [], []
+        for _ in range(batch):
+            v = jnp.min(jnp.where(avail, end_t, inf))
+            take = avail & (end_t <= v)
+            taus.append(v)
+            freds.append(jnp.sum(jnp.where(take, w_sz, zero)))
+            avail = avail & ~take
+        frontier = jnp.min(jnp.where(avail, end_t, inf))
+        tau_v = jnp.stack(taus)                        # (k,) sorted
+        freedcum = jnp.cumsum(jnp.stack(freds))        # (k,)
+        tau_pad = jnp.concatenate([t[None], tau_v])    # idx 0 → t
+        # (2) prefix-sum admission. Pending lanes (queued now or
+        # arriving inside the round) block each other in lane
+        # (= arrival) order; inherited queue heads that already
+        # fit free0 belong to the convergence residue of the LAST
+        # round's first-fit and start retroactively at t.
+        pend = engaged & ~run0 & ~done0 & (w_sub <= b)
+        psz = jnp.where(pend, w_sz, zero)
+        need = (jnp.cumsum(psz) - psz) + w_sz - free0
+        uncov = need[:, None] > freedcum[None, :]      # (K, k)
+        idx = jnp.sum(uncov.astype(jnp.int32), axis=-1)
+        # idx = first slot whose cumulative mass covers `need`;
+        # tau_pad maps slot j to τ_j (and a non-positive need to t:
+        # capacity already sufficed, the job is last round's
+        # first-fit convergence residue or starts at its arrival).
+        start_i = jnp.where(need <= 0.0, 0,
+                            jnp.minimum(idx + 1, batch))
+        covered = pend & ((need <= 0.0) | (idx < batch))
+        start_at = jnp.where(covered,
+                             jnp.maximum(w_sub, tau_pad[start_i]),
+                             inf)
+        # A zero-runtime job starting AT the round start would
+        # complete instantly — freed mass the ledger below cannot
+        # carry (Θ must stay > t), which would under-estimate
+        # free_at and mask a real leapfrog. Leave such a lane to
+        # the tail's first-fit (the one-instant-late residue the
+        # contract already carries); zero-runtime starts at later
+        # instants defer naturally through the chain probe.
+        start_at = jnp.where((w_rt <= 0.0) & (start_at <= t), inf,
+                             start_at)
+        # (3) divergence probes, all conservative (free capacity
+        # only ever OVER-estimated, so every possible first-fit
+        # leapfrog defers). started_at[j] counts admissions that
+        # happened strictly up to τ_j.
+        stsz = jnp.where(start_at < inf, w_sz, zero)
+        started_by = jnp.sum(
+            jnp.where(start_at[:, None] <= tau_v[None, :],
+                      stsz[:, None], zero), axis=0)    # (k,)
+        free_at = free0 + freedcum - started_by        # (k,)
+        fits = (pend[:, None]
+                & (w_sub[:, None] <= tau_v[None, :])
+                & (start_at[:, None] > tau_v[None, :])
+                & (w_sz[:, None] <= free_at[None, :])) # (K, k)
+        leap = jnp.min(jnp.where(jnp.any(fits, axis=0), tau_v, inf))
+        # ...and at each arrival instant: net freed mass before the
+        # arrival, ignoring arrival-triggered consumption (an
+        # overestimate), one (K,k) @ (k,) contraction.
+        net = jnp.concatenate([freedcum[:1],
+                               jnp.diff(freedcum)]) \
+            - jnp.concatenate([started_by[:1],
+                               jnp.diff(started_by)])
+        free_arr = free0 + (tau_v[None, :]
+                            < w_sub[:, None]).astype(f) @ net
+        arr_leap = pend & (w_sub > t) & (start_at > w_sub) \
+            & (w_sz <= free_arr)
+        leap = jnp.minimum(leap, jnp.min(jnp.where(arr_leap, w_sub,
+                                                   inf)))
+        # Chain events: batch-started jobs finishing inside the
+        # round free mass the ledger above does not see.
+        chain = jnp.min(jnp.where(start_at < inf,
+                                  start_at + w_rt, inf))
+        chain = jnp.where(chain > t, chain, inf)       # 0-runtime
+        theta = jnp.minimum(jnp.minimum(leap, chain), frontier)
+        # (4) apply everything strictly before Θ; Θ itself (and
+        # anything later) belongs to the tail / next rounds.
+        cmp_c = engaged & run0 & (end_t < jnp.minimum(theta, b))
+        st_c = (start_at < jnp.minimum(theta, b))
+        cf = cmp_c.astype(f)
+        folds_c = jnp.sum(jnp.stack([cf, cf * (end_t - w_sub),
+                                     cf * (end_t - start_t),
+                                     cf * w_sz,
+                                     jnp.where(st_c, w_sz, zero)]),
+                          axis=-1)                 # one packed reduction
+        run = (run0 & ~cmp_c) | st_c
+        done = done0 | cmp_c
+        start_t = jnp.where(st_c, start_at, start_t)
+        end_t = jnp.where(st_c, start_at + w_rt, end_t)
+        used = used0 - folds_c[3] + folds_c[4]
+        acc["completed"] += folds_c[0]
+        acc["turn_sum"] += folds_c[1]
+        acc["exec_sum"] += folds_c[2]
+        acc["coalesced"] += folds_c[0]
+        b = jnp.minimum(b, theta)
+    # --- exact interval integration: the policy-owned share is
+    # constant on (t, b] — it only ever changes at policy actions,
+    # which happen at rounds (ticks, rises), never at coalesced
+    # completions or starts.
+    acc["node_seconds"] += alloc_prev * jnp.maximum(b - t, 0.0)
+    # --- retroactive starts at exact submit times.
+    starting = (w_sub > t) & (w_sub <= b) & ~run & ~done & skip_ok
+    run = run | starting
+    start_t = jnp.where(starting, w_sub, start_t)
+    end_t = jnp.where(starting, w_sub + w_rt, end_t)
+    # --- exact completions (including flash jobs that started and
+    # finished inside this very horizon).
+    completing = run & (end_t <= b)
+    run = run & ~completing
+    done = done | completing
+    cmp_f = completing.astype(f)
+    folds = jnp.sum(jnp.stack([cmp_f, cmp_f * (end_t - w_sub),
+                               cmp_f * (end_t - start_t),
+                               jnp.where(run, w_sz, zero)]),
+                    axis=-1)                     # one packed reduction
+    acc["completed"] += folds[0]
+    acc["turn_sum"] += folds[1]
+    acc["exec_sum"] += folds[2]
+    used = folds[3]
+    # --- policy actions at b. The tick fires only on a lease
+    # boundary and reads the boundary-time demand from the host
+    # table; between stops the carried demand only matters to FB,
+    # whose reclaim level it tracks exactly (rises are FB stops).
+    queued = (w_sub <= b) & ~run & ~done
+    is_tick = t_tick <= b
+    win = jnp.minimum(k_next, NT - 1.0).astype(jnp.int32)
+    if policy == "fb":
+        rised = rise_times[rise_i] <= b
+        wsv = jnp.where(rised, rise_vals[rise_i], wsv)
+        rise_i = rise_i + rised.astype(jnp.int32)
+    wsv = jnp.where(is_tick, ws_at_tick[win], wsv)
+    owned, pool_pbj, run, starts, integrand, acc = _actions(
+        policy, ctx, spec.ff_passes, owned, pool_pbj, run, used, queued,
+        wsv, is_tick, win, w_sz, szcls, acc)
+    start_t = jnp.where(starts, b, start_t)
+    end_t = jnp.where(starts, b + w_rt, end_t)
+    # Recompute the queue and usage from the POST-action lane state:
+    # fb_actions may have killed running lanes, which re-queue
+    # (run cleared, not done) and release their nodes — deriving
+    # from the pre-action masks would hide a killed job from the
+    # next round's completion horizon and overstate ``used`` in its
+    # skip/enqueue tests.
+    post = jnp.sum(jnp.stack([
+        jnp.where((w_sub <= b) & ~run & ~done, one, zero),
+        jnp.where(run, w_sz, zero)]),
+        axis=-1)                                 # one packed reduction
+    has_queue = post[0] > 0
+    used = post[1]
+    acc["window_overflow"] += (active & (row_sub <= b)).astype(f)
+    acc["rounds"] += active.astype(f)
+    return (b, owned, pool_pbj, used, has_queue, wsv, integrand,
+            rise_i, row_sub, w_sub, w_sz, w_rt, run, done, start_t,
+            end_t, acc)
+
+
+def _chunk_core(policy: str, ctx: Dict, spec: RoundsSpec, core):
+    """One outer step of the loop: window compaction, job-table
+    admission, the per-chunk size classes and ``compact_every`` unrolled
+    event rounds. ``core`` is the 17-tuple loop state with ``next_row``
+    (the admission cursor) in the slot the inner rounds carry
+    ``row_sub`` in. Shared verbatim by the XLA backend and the fused
+    Pallas kernel — the kernel body IS this function applied to values
+    read from its refs (repro.kernels.round_step)."""
+    (t, owned, pool_pbj, used, has_queue, wsv, alloc_prev, rise_i,
+     next_row, w_sub, w_sz, w_rt, run, done, start_t, end_t, acc) = core
+    tr_submit = ctx["tr_submit"]
+    tr_size, tr_runtime = ctx["tr_size"], ctx["tr_runtime"]
+    K = w_sub.shape[0]
+    Jp = tr_submit.shape[0]        # includes >= K pad rows (submit = +inf)
+    f = w_sub.dtype
+    inf = jnp.asarray(jnp.inf, f)
+    zero = jnp.zeros((), f)
+    lanes = jnp.arange(K)
+    # --- compact done lanes out of the window (stacked gather) and
+    # admit the next table rows into the freed tail as contiguous
+    # dynamic-slice reads. When the table is exhausted the slice
+    # start clamps into the +inf padding block, so admitted lanes
+    # read pad rows — never a duplicate of a live row.
+    (run_c, start_t, end_t, w_sub, w_sz, w_rt), n_keep = \
+        stable_compact(~done, [run, start_t, end_t, w_sub, w_sz, w_rt],
+                       [False, zero, zero, inf, zero, zero])
+    run = run_c
+    done = jnp.zeros(K, bool)
+    adm_start = next_row - n_keep
+    tail = lanes >= n_keep
+    w_sub = jnp.where(tail, jax.lax.dynamic_slice(tr_submit,
+                                                  (adm_start,), (K,)),
+                      w_sub)
+    w_sz = jnp.where(tail, jax.lax.dynamic_slice(tr_size,
+                                                 (adm_start,), (K,)),
+                     w_sz)
+    w_rt = jnp.where(tail, jax.lax.dynamic_slice(tr_runtime,
+                                                 (adm_start,), (K,)),
+                     w_rt)
+    next_row = jnp.minimum(next_row + (K - n_keep),
+                           Jp).astype(jnp.int32)
+    row_sub = tr_submit[jnp.minimum(next_row, Jp - 1)]
+    inner = (t, owned, pool_pbj, used, has_queue, wsv, alloc_prev,
+             rise_i, row_sub, w_sub, w_sz, w_rt, run, done, start_t,
+             end_t, acc)
+    # The FB kill size classes depend only on the window contents,
+    # which change at compactions — computed once per chunk, not
+    # once per round.
+    szcls = _size_classes(w_sz)
+    for _ in range(spec.compact_every):  # unrolled: XLA fuses the rounds
+        inner = _round_body(policy, ctx, spec, inner, szcls)
+    (t, owned, pool_pbj, used, has_queue, wsv, alloc_prev, rise_i,
+     row_sub, w_sub, w_sz, w_rt, run, done, start_t, end_t,
+     acc) = inner
+    return (t, owned, pool_pbj, used, has_queue, wsv, alloc_prev,
+            rise_i, next_row, w_sub, w_sz, w_rt, run, done, start_t,
+            end_t, acc)
+
+
 def _simulate_rounds(policy: str, prm: Dict, pk: PackedEventWorkloads,
                      spec: RoundsSpec) -> Dict[str, jnp.ndarray]:
     """One (point, workload) lane; vmapped over both axes by the caller.
 
     ``pk`` holds a single workload's rows; ``prm`` one sweep point's
     scalars plus its index ``p_idx`` into the packed WS fold tables;
-    ``policy`` is static ("fb" | "flb_nub").
+    ``policy`` is static ("fb" | "flb_nub"). With ``spec.kernel ==
+    "pallas"`` the loop body runs as the fused Pallas round-step kernel
+    (``repro.kernels.round_step``) on a float-packed state; the state
+    round-trips bit-exactly, and the kernel body calls the same
+    ``_chunk_core``, so both backends return identical rows.
     """
     duration = spec.duration
-    ff_passes = spec.ff_passes
     K = spec.window
     R = spec.compact_every
-    batch = min(spec.batch, K)      # top-k cannot exceed the window
-    tr_submit, tr_size, tr_runtime = pk.submit, pk.size, pk.runtime
-    rise_times, rise_vals, ws0 = pk.rise_times, pk.rise_vals, pk.ws0
-    Jp = tr_submit.shape[0]        # includes >= K pad rows (submit = +inf)
+    ctx = _lane_ctx(policy, prm, pk)
+    tr_submit = ctx["tr_submit"]
+    tr_size, tr_runtime = ctx["tr_size"], ctx["tr_runtime"]
+    ws0 = pk.ws0
     f = tr_submit.dtype
-    inf = jnp.asarray(jnp.inf, f)
     zero = jnp.zeros((), f)
-    one = jnp.ones((), f)
-    dur = jnp.asarray(duration, f)
-    lanes = jnp.arange(K)
-    L = prm["lease"].astype(f)
-    p_idx = prm["p_idx"]
-    ws_integral = pk.ws_integral[p_idx]      # exact ∫ WS share
-    ws_winmax = pk.ws_winmax[p_idx]          # (NT,) WS-share window max
-    ws_at_tick = pk.ws_at_tick[p_idx]        # (NT,) demand at boundaries
-    NT = ws_winmax.shape[0]
+    ws_integral = pk.ws_integral[prm["p_idx"]]   # exact ∫ WS share
+    ws_winmax = ctx["ws_winmax"]
     if policy == "fb":
-        C = prm["capacity"].astype(f)
+        C = ctx["C"]
         owned0 = C - jnp.minimum(ws0, C)     # startup: all idle → PBJ (§5.1)
         pool0 = zero
     else:
-        B = prm["B"].astype(f)
-        lb_ws = prm["lb_ws"].astype(f)
-        U, V, G = (prm[k].astype(f) for k in ("U", "V", "G"))
-        owned0 = jnp.maximum(B - lb_ws, 1.0)  # startup lower bound (§5.2)
+        owned0 = jnp.maximum(ctx["B"] - ctx["lb_ws"], 1.0)  # §5.2 bound
         pool0 = owned0
-
-    def actions(owned, pool_pbj, run, used, queued, wsv, is_tick, win,
-                w_sz, szcls, acc):
-        """The shared §5 policy step at one instant (see scan.py). The
-        integrand it returns covers only the policy-owned share — the
-        WS share integrates host-side (``ws_integral``) — and peaks
-        fold per lease window: the policy share is constant inside one
-        (FB reclaims only at demand-rise stops, which ratchet it down
-        monotonically after the window's grant; FLB adjusts only at
-        ticks), so combining it with the precomputed WS-share window
-        max is exact without stopping at demand changes."""
-        if policy == "fb":
-            owned, run, starts, killed, alloc, pbj_ev = fb_actions(
-                C, owned, run, used, queued, wsv, w_sz,
-                *szcls, is_tick, ff_passes)
-            acc["kills"] += jnp.sum(killed)
-            # Window peak: owned is maximal right after the window's
-            # grant, and the §5.1 ratchet owned(τ) = C − runmax(ws)
-            # makes the in-window alloc max exactly min(owned + M, C).
-            peak_cand = jnp.minimum(owned + ws_winmax[win], C)
-            integrand = owned
-        else:
-            owned, pool_pbj, run, starts, alloc, pbj_ev = flb_actions(
-                B, lb_ws, U, V, G, owned, pool_pbj, run, used, queued,
-                wsv, w_sz, is_tick, ff_passes)
-            leased = B + jnp.maximum(owned - pool_pbj, 0.0)
-            peak_cand = leased + ws_winmax[win]
-            integrand = leased
-        acc["peak"] = jnp.maximum(acc["peak"],
-                                  jnp.where(is_tick, peak_cand, -jnp.inf))
-        acc["pbj_adjusts"] += pbj_ev
-        acc["adjusts"] += pbj_ev
-        return owned, pool_pbj, run, starts, integrand, acc
-
-    def round_body(carry, szcls, coalesce: bool):
-        (t, owned, pool_pbj, used, has_queue, wsv, alloc_prev, rise_i,
-         row_sub, w_sub, w_sz, w_rt, run, done, start_t, end_t, acc) = carry
-        active = t < duration
-        # --- the next event horizon. Every candidate is strictly > t,
-        # so the loop always progresses; a finished lane pins b = t and
-        # becomes a no-op. Completions bound the horizon only while the
-        # queue is non-empty (they can then start queued work);
-        # otherwise they fold retroactively below, at exact times.
-        mins = jnp.min(jnp.stack([jnp.where(w_sub > t, w_sub, inf),
-                                  jnp.where(run, end_t, inf)]),
-                       axis=-1)                      # one packed reduction
-        next_sub = jnp.minimum(mins[0],
-                               jnp.where(row_sub > t, row_sub, inf))
-        k_next = jnp.floor(t / L) + 1.0
-        t_tick = k_next * L
-        b0 = jnp.minimum(t_tick,
-                         jnp.minimum(jnp.where(row_sub > t, row_sub, inf),
-                                     dur))
-        if policy == "fb":
-            b0 = jnp.minimum(b0, rise_times[rise_i])
-        # --- submit skipping and the contended horizon. Empty queue:
-        # if every submit in (t, b0] fits the currently-free capacity
-        # in aggregate (free only grows inside the horizon; the
-        # row_sub cap keeps every such submit inside the window), each
-        # starts exactly on time — retroactively, below; otherwise
-        # stop at the next submit. Non-empty queue with coalescing on
-        # (batch > 1): neither completions nor submits bound the
-        # horizon — the coalescer below replays a whole batch of them
-        # inside (t, b) at their exact instants (and re-clamps b when
-        # it has to stop early). With coalescing off the legacy
-        # horizon applies: stop at the earliest running-lane
-        # completion, and silently enqueue arrivals that cannot fit
-        # the (then constant) free capacity.
-        if not coalesce:
-            b0 = jnp.minimum(b0, jnp.where(has_queue, mins[1], inf))
-        fresh = (w_sub > t) & (w_sub <= b0)
-        sum_new = jnp.sum(jnp.where(fresh, w_sz, zero))
-        free = owned - used
-        skip_ok = ~has_queue & (sum_new <= free)
-        if coalesce:
-            unbounded = skip_ok | has_queue
-        else:
-            min_new = jnp.min(jnp.where(fresh, w_sz, inf))
-            unbounded = skip_ok | (has_queue & (min_new > free))
-        b = jnp.where(unbounded, b0, jnp.minimum(b0, next_sub))
-        b = jnp.where(active, b, t)
-        # --- the contended-stretch coalescer: while a queue existed at
-        # the round start, every completion and submit strictly inside
-        # (t, b) is an event the engine reacts to (a finish or arrival
-        # triggers the §6.5.2 first-fit), and the coalescer replays a
-        # whole batch of them in ONE round of fixed vector work:
-        #
-        #   1. masked top-k — the next `batch` distinct completion
-        #      instants among running lanes, extracted as iterated
-        #      masked mins (sorted by construction; simultaneous
-        #      completions collapse into one instant), with the freed
-        #      node mass per instant;
-        #   2. a prefix-sum feasibility test for queue admissions at
-        #      each instant: under the engine's arrival-order scan a
-        #      pending job q starts once the cumulative freed mass
-        #      covers the pending jobs ahead of it plus itself
-        #      (arrival order IS lane order, so `need` is one exclusive
-        #      prefix sum), i.e. at instant τ_{i(q)} with i(q) the
-        #      first index where freedcum ≥ need(q) — or at its own
-        #      submit time if capacity already suffices;
-        #   3. defer-on-divergence: the closed form assumes FIFO
-        #      starts. Whenever the engine's first-fit could diverge —
-        #      an unstarted pending job that FITS the (conservatively
-        #      overestimated) free capacity at some replayed instant
-        #      or at its own arrival (a leapfrog), or a batch-started
-        #      job completing inside the round (a chain event the
-        #      freed-mass ledger does not contain), or more than
-        #      `batch` instants (the cap) — the round ends exactly AT
-        #      the first such instant Θ: every extracted instant,
-        #      admission and fold before Θ stays, and the tail replays
-        #      Θ itself with the full `ff_passes` first-fit (and the
-        #      §5.1 kill machinery when Θ is a demand rise), exactly
-        #      like an uncoalesced round.
-        #
-        # Allocation integrals need no per-instant work at all: the
-        # policy-owned share is constant across the whole stretch (FB
-        # reclaims only at rises, which bound b; FLB adjusts only at
-        # ticks), so each sub-interval contributes to one rectangle.
-        # A lax.top_k sort probe was measured ~6x the cost of this
-        # whole section on XLA:CPU — hence the iterated masked mins.
-        if coalesce:
-            engaged = active & has_queue
-            run0, done0, used0, free0 = run, done, used, free
-            # (1) masked top-k completion instants inside (t, b).
-            avail = engaged & run0 & (end_t < b)
-            taus, freds = [], []
-            for _ in range(batch):
-                v = jnp.min(jnp.where(avail, end_t, inf))
-                take = avail & (end_t <= v)
-                taus.append(v)
-                freds.append(jnp.sum(jnp.where(take, w_sz, zero)))
-                avail = avail & ~take
-            frontier = jnp.min(jnp.where(avail, end_t, inf))
-            tau_v = jnp.stack(taus)                        # (k,) sorted
-            freedcum = jnp.cumsum(jnp.stack(freds))        # (k,)
-            tau_pad = jnp.concatenate([t[None], tau_v])    # idx 0 → t
-            # (2) prefix-sum admission. Pending lanes (queued now or
-            # arriving inside the round) block each other in lane
-            # (= arrival) order; inherited queue heads that already
-            # fit free0 belong to the convergence residue of the LAST
-            # round's first-fit and start retroactively at t.
-            pend = engaged & ~run0 & ~done0 & (w_sub <= b)
-            psz = jnp.where(pend, w_sz, zero)
-            need = (jnp.cumsum(psz) - psz) + w_sz - free0
-            uncov = need[:, None] > freedcum[None, :]      # (K, k)
-            idx = jnp.sum(uncov.astype(jnp.int32), axis=-1)
-            # idx = first slot whose cumulative mass covers `need`;
-            # tau_pad maps slot j to τ_j (and a non-positive need to t:
-            # capacity already sufficed, the job is last round's
-            # first-fit convergence residue or starts at its arrival).
-            start_i = jnp.where(need <= 0.0, 0,
-                                jnp.minimum(idx + 1, batch))
-            covered = pend & ((need <= 0.0) | (idx < batch))
-            start_at = jnp.where(covered,
-                                 jnp.maximum(w_sub, tau_pad[start_i]),
-                                 inf)
-            # A zero-runtime job starting AT the round start would
-            # complete instantly — freed mass the ledger below cannot
-            # carry (Θ must stay > t), which would under-estimate
-            # free_at and mask a real leapfrog. Leave such a lane to
-            # the tail's first-fit (the one-instant-late residue the
-            # contract already carries); zero-runtime starts at later
-            # instants defer naturally through the chain probe.
-            start_at = jnp.where((w_rt <= 0.0) & (start_at <= t), inf,
-                                 start_at)
-            # (3) divergence probes, all conservative (free capacity
-            # only ever OVER-estimated, so every possible first-fit
-            # leapfrog defers). started_at[j] counts admissions that
-            # happened strictly up to τ_j.
-            stsz = jnp.where(start_at < inf, w_sz, zero)
-            started_by = jnp.sum(
-                jnp.where(start_at[:, None] <= tau_v[None, :],
-                          stsz[:, None], zero), axis=0)    # (k,)
-            free_at = free0 + freedcum - started_by        # (k,)
-            fits = (pend[:, None]
-                    & (w_sub[:, None] <= tau_v[None, :])
-                    & (start_at[:, None] > tau_v[None, :])
-                    & (w_sz[:, None] <= free_at[None, :])) # (K, k)
-            leap = jnp.min(jnp.where(jnp.any(fits, axis=0), tau_v, inf))
-            # ...and at each arrival instant: net freed mass before the
-            # arrival, ignoring arrival-triggered consumption (an
-            # overestimate), one (K,k) @ (k,) contraction.
-            net = jnp.concatenate([freedcum[:1],
-                                   jnp.diff(freedcum)]) \
-                - jnp.concatenate([started_by[:1],
-                                   jnp.diff(started_by)])
-            free_arr = free0 + (tau_v[None, :]
-                                < w_sub[:, None]).astype(f) @ net
-            arr_leap = pend & (w_sub > t) & (start_at > w_sub) \
-                & (w_sz <= free_arr)
-            leap = jnp.minimum(leap, jnp.min(jnp.where(arr_leap, w_sub,
-                                                       inf)))
-            # Chain events: batch-started jobs finishing inside the
-            # round free mass the ledger above does not see.
-            chain = jnp.min(jnp.where(start_at < inf,
-                                      start_at + w_rt, inf))
-            chain = jnp.where(chain > t, chain, inf)       # 0-runtime
-            theta = jnp.minimum(jnp.minimum(leap, chain), frontier)
-            # (4) apply everything strictly before Θ; Θ itself (and
-            # anything later) belongs to the tail / next rounds.
-            cmp_c = engaged & run0 & (end_t < jnp.minimum(theta, b))
-            st_c = (start_at < jnp.minimum(theta, b))
-            cf = cmp_c.astype(f)
-            folds_c = jnp.sum(jnp.stack([cf, cf * (end_t - w_sub),
-                                         cf * (end_t - start_t),
-                                         cf * w_sz,
-                                         jnp.where(st_c, w_sz, zero)]),
-                              axis=-1)                 # one packed reduction
-            run = (run0 & ~cmp_c) | st_c
-            done = done0 | cmp_c
-            start_t = jnp.where(st_c, start_at, start_t)
-            end_t = jnp.where(st_c, start_at + w_rt, end_t)
-            used = used0 - folds_c[3] + folds_c[4]
-            acc["completed"] += folds_c[0]
-            acc["turn_sum"] += folds_c[1]
-            acc["exec_sum"] += folds_c[2]
-            acc["coalesced"] += folds_c[0]
-            b = jnp.minimum(b, theta)
-        # --- exact interval integration: the policy-owned share is
-        # constant on (t, b] — it only ever changes at policy actions,
-        # which happen at rounds (ticks, rises), never at coalesced
-        # completions or starts.
-        acc["node_seconds"] += alloc_prev * jnp.maximum(b - t, 0.0)
-        # --- retroactive starts at exact submit times.
-        starting = (w_sub > t) & (w_sub <= b) & ~run & ~done & skip_ok
-        run = run | starting
-        start_t = jnp.where(starting, w_sub, start_t)
-        end_t = jnp.where(starting, w_sub + w_rt, end_t)
-        # --- exact completions (including flash jobs that started and
-        # finished inside this very horizon).
-        completing = run & (end_t <= b)
-        run = run & ~completing
-        done = done | completing
-        cmp_f = completing.astype(f)
-        folds = jnp.sum(jnp.stack([cmp_f, cmp_f * (end_t - w_sub),
-                                   cmp_f * (end_t - start_t),
-                                   jnp.where(run, w_sz, zero)]),
-                        axis=-1)                     # one packed reduction
-        acc["completed"] += folds[0]
-        acc["turn_sum"] += folds[1]
-        acc["exec_sum"] += folds[2]
-        used = folds[3]
-        # --- policy actions at b. The tick fires only on a lease
-        # boundary and reads the boundary-time demand from the host
-        # table; between stops the carried demand only matters to FB,
-        # whose reclaim level it tracks exactly (rises are FB stops).
-        queued = (w_sub <= b) & ~run & ~done
-        is_tick = t_tick <= b
-        win = jnp.minimum(k_next, NT - 1.0).astype(jnp.int32)
-        if policy == "fb":
-            rised = rise_times[rise_i] <= b
-            wsv = jnp.where(rised, rise_vals[rise_i], wsv)
-            rise_i = rise_i + rised.astype(jnp.int32)
-        wsv = jnp.where(is_tick, ws_at_tick[win], wsv)
-        owned, pool_pbj, run, starts, integrand, acc = actions(
-            owned, pool_pbj, run, used, queued, wsv, is_tick, win, w_sz,
-            szcls, acc)
-        start_t = jnp.where(starts, b, start_t)
-        end_t = jnp.where(starts, b + w_rt, end_t)
-        # Recompute the queue and usage from the POST-action lane state:
-        # fb_actions may have killed running lanes, which re-queue
-        # (run cleared, not done) and release their nodes — deriving
-        # from the pre-action masks would hide a killed job from the
-        # next round's completion horizon and overstate ``used`` in its
-        # skip/enqueue tests.
-        post = jnp.sum(jnp.stack([
-            jnp.where((w_sub <= b) & ~run & ~done, one, zero),
-            jnp.where(run, w_sz, zero)]),
-            axis=-1)                                 # one packed reduction
-        has_queue = post[0] > 0
-        used = post[1]
-        acc["window_overflow"] += (active & (row_sub <= b)).astype(f)
-        acc["rounds"] += active.astype(f)
-        return (b, owned, pool_pbj, used, has_queue, wsv, integrand,
-                rise_i, row_sub, w_sub, w_sz, w_rt, run, done, start_t,
-                end_t, acc)
-
-    def cond(carry):
-        i, t = carry[0], carry[1]
-        return (i < outer_max) & (t < duration)
-
-    def chunk(carry):
-        (i, t, owned, pool_pbj, used, has_queue, wsv, alloc_prev, rise_i,
-         next_row, w_sub, w_sz, w_rt, run, done, start_t, end_t,
-         acc) = carry
-        # --- compact done lanes out of the window (stacked gather) and
-        # admit the next table rows into the freed tail as contiguous
-        # dynamic-slice reads. When the table is exhausted the slice
-        # start clamps into the +inf padding block, so admitted lanes
-        # read pad rows — never a duplicate of a live row.
-        (run_c, start_t, end_t, w_sub, w_sz, w_rt), n_keep = \
-            stable_compact(~done, [run, start_t, end_t, w_sub, w_sz, w_rt],
-                           [False, zero, zero, inf, zero, zero])
-        run = run_c
-        done = jnp.zeros(K, bool)
-        adm_start = next_row - n_keep
-        tail = lanes >= n_keep
-        w_sub = jnp.where(tail, jax.lax.dynamic_slice(tr_submit,
-                                                      (adm_start,), (K,)),
-                          w_sub)
-        w_sz = jnp.where(tail, jax.lax.dynamic_slice(tr_size,
-                                                     (adm_start,), (K,)),
-                         w_sz)
-        w_rt = jnp.where(tail, jax.lax.dynamic_slice(tr_runtime,
-                                                     (adm_start,), (K,)),
-                         w_rt)
-        next_row = jnp.minimum(next_row + (K - n_keep),
-                               Jp).astype(jnp.int32)
-        row_sub = tr_submit[jnp.minimum(next_row, Jp - 1)]
-        inner = (t, owned, pool_pbj, used, has_queue, wsv, alloc_prev,
-                 rise_i, row_sub, w_sub, w_sz, w_rt, run, done, start_t,
-                 end_t, acc)
-        # The FB kill size classes depend only on the window contents,
-        # which change at compactions — computed once per chunk, not
-        # once per round.
-        szcls = _size_classes(w_sz)
-        for _ in range(R):      # unrolled: XLA fuses across the rounds
-            inner = round_body(inner, szcls, coalesce=batch > 1)
-        (t, owned, pool_pbj, used, has_queue, wsv, alloc_prev, rise_i,
-         row_sub, w_sub, w_sz, w_rt, run, done, start_t, end_t,
-         acc) = inner
-        return (i + 1, t, owned, pool_pbj, used, has_queue, wsv,
-                alloc_prev, rise_i, next_row, w_sub, w_sz, w_rt, run,
-                done, start_t, end_t, acc)
 
     # ---- startup round at t = 0: the engine's startup() allocation
     # followed by the t = 0 submit events (no tick fires at 0), plus
     # the first lease window's peak probe (the tick-gated probe in
-    # actions() starts at window 1).
-    acc = {k: zero for k in
-           ("completed", "turn_sum", "exec_sum", "kills", "node_seconds",
-            "peak", "pbj_adjusts", "adjusts", "window_overflow", "rounds",
-            "coalesced")}
+    # _actions starts at window 1).
+    acc = {k: zero for k in ACC_KEYS}
     w_sub = tr_submit[:K]
     w_sz = tr_size[:K]
     w_rt = tr_runtime[:K]
     queued0 = w_sub <= 0.0
-    owned, pool_pbj, run, starts0, alloc0, acc = actions(
-        owned0, pool0, jnp.zeros(K, bool), zero, queued0, ws0,
-        jnp.asarray(False), jnp.asarray(0, jnp.int32), w_sz,
-        _size_classes(w_sz), acc)
+    owned, pool_pbj, run, starts0, alloc0, acc = _actions(
+        policy, ctx, spec.ff_passes, owned0, pool0, jnp.zeros(K, bool),
+        zero, queued0, ws0, jnp.asarray(False), jnp.asarray(0, jnp.int32),
+        w_sz, _size_classes(w_sz), acc)
     if policy == "fb":
         acc["peak"] = jnp.maximum(acc["peak"],
                                   jnp.minimum(owned + ws_winmax[0], C))
     else:
         acc["peak"] = jnp.maximum(
-            acc["peak"], B + jnp.maximum(owned - pool_pbj, 0.0)
+            acc["peak"], ctx["B"] + jnp.maximum(owned - pool_pbj, 0.0)
             + ws_winmax[0])
     start_t = jnp.zeros(K, f)
     end_t = jnp.where(starts0, w_rt, jnp.zeros(K, f))
@@ -753,12 +834,47 @@ def _simulate_rounds(policy: str, prm: Dict, pk: PackedEventWorkloads,
     has_queue0 = jnp.sum(jnp.where(queued0 & ~run, 1.0, 0.0)) > 0
 
     outer_max = -(-spec.max_rounds // R)
-    carry0 = (jnp.asarray(0, jnp.int32), zero, owned, pool_pbj, used0,
-              has_queue0, ws0, alloc0, jnp.asarray(0, jnp.int32),
-              jnp.asarray(K, jnp.int32), w_sub, w_sz, w_rt, run,
-              jnp.zeros(K, bool), start_t, end_t, acc)
-    carry = jax.lax.while_loop(cond, chunk, carry0)
-    t_end, acc = carry[1], carry[-1]
+    core0 = (zero, owned, pool_pbj, used0, has_queue0, ws0, alloc0,
+             jnp.asarray(0, jnp.int32), jnp.asarray(K, jnp.int32),
+             w_sub, w_sz, w_rt, run, jnp.zeros(K, bool), start_t, end_t,
+             acc)
+
+    if spec.kernel == "pallas":
+        # The fused backend: pack the loop state into the kernel's
+        # scalar vector + window matrix, run each outer step as ONE
+        # pallas_call (vmapped lanes become the kernel grid), unpack
+        # once after the loop. Imported lazily — the kernels layer is
+        # optional and the import direction stays kernels -> sim.
+        from repro.kernels import round_step as rsk
+        jobs, rises, wstab, prmv = rsk.lane_inputs(policy, ctx)
+        sc0, win0 = rsk.pack_carry(core0)
+
+        def cond(carry):
+            return (carry[0] < outer_max) & (carry[1][rsk.SC_T] < duration)
+
+        def chunk(carry):
+            i, sc, win = carry
+            sc, win = rsk.chunk_step(jobs, rises, wstab, prmv, sc, win,
+                                     policy=policy, spec=spec)
+            return (i + 1, sc, win)
+
+        carry = jax.lax.while_loop(
+            cond, chunk, (jnp.asarray(0, jnp.int32), sc0, win0))
+        core = rsk.unpack_carry(carry[1], carry[2])
+        t_end, acc = core[0], core[-1]
+    else:
+        def cond(carry):
+            i, t = carry[0], carry[1]
+            return (i < outer_max) & (t < duration)
+
+        def chunk(carry):
+            return (carry[0] + 1,) + _chunk_core(policy, ctx, spec,
+                                                 carry[1:])
+
+        carry = jax.lax.while_loop(
+            cond, chunk, (jnp.asarray(0, jnp.int32),) + core0)
+        t_end, acc = carry[1], carry[-1]
+
     n_done = jnp.maximum(acc["completed"], 1.0)
     return {
         "completed_jobs": acc["completed"],

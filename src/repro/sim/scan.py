@@ -428,7 +428,10 @@ def stable_compact(keep, arrays, fills):
     n_keep = cs[-1]
     # src[i] = index of the (i+1)-th kept lane (searchsorted over the
     # monotone keep-prefix), valid for lanes < n_keep.
-    src = jnp.minimum(jnp.searchsorted(cs, jnp.arange(1, K + 1)), K - 1)
+    # arange(K) + 1 (not arange(1, K + 1)): the latter lowers to a
+    # captured numpy constant under Pallas tracing; the former is a
+    # staged iota, identical values either way.
+    src = jnp.minimum(jnp.searchsorted(cs, jnp.arange(K) + 1), K - 1)
     valid = jnp.arange(K) < n_keep
     stacked = jnp.stack([a.astype(f) for a in arrays])
     moved = stacked[:, src]
@@ -679,7 +682,15 @@ def sharded_grid_map(lane_fn, prm_tree, packed, n_workloads: int,
                             np.zeros(pad, np.int64)]).astype(np.int32)
     flat = _sharded_lanes(prm_tree, packed, jnp.asarray(w_idx),
                           jnp.asarray(p_idx), lane_fn=lane_fn, mesh=mesh)
-    return {k: v[:n].reshape(w, p) for k, v in flat.items()}
+    # Gather host-side: a device-side slice/reshape of a lanes-sharded
+    # array compiles a tiny cross-module all-gather, and XLA:CPU's
+    # rendezvous can deadlock it against the still-executing sharded
+    # program (observed with the long interpret-mode fused round-step
+    # executable: rank 0 never reaches the rendezvous and every thread
+    # parks at 0% CPU). block_until_ready serializes the two, and
+    # np.asarray assembles the shards with no collective at all.
+    flat = jax.block_until_ready(flat)
+    return {k: np.asarray(v)[:n].reshape(w, p) for k, v in flat.items()}
 
 
 def _scan_grids_sharded(fb, flb, fb_packed, flb_packed, fb_spec, flb_spec,

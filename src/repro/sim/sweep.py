@@ -68,6 +68,7 @@ lease later (the tick event sorts before the finish event).
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -156,10 +157,16 @@ class ScanOptions:
     recommended opt-in value, 1 (the default) leaves one round per
     contended completion — on CPU hosts the coalescer's fixed per-
     round vector work measurably outweighs the rounds it saves, see
-    the rounds module docstring. The scan path ignores it. ``devices`` selects the execution backend
-    (``repro.compat.resolve_devices``): ``None`` runs the whole grid on
-    one device, a count or device sequence shards the (point × trace)
-    lanes across host devices via ``shard_map``."""
+    the rounds module docstring. The scan path ignores it. ``kernel``
+    selects the rounds engine's round-step backend: ``"xla"`` (the safe
+    default) dispatches the traced body op by op, ``"pallas"`` fuses the
+    whole outer step — compaction, admission and the unrolled rounds —
+    into one Pallas kernel per lane (``repro.kernels.round_step``;
+    interpret mode auto-selected off-TPU), bit-identical rows either
+    way. The scan path ignores it. ``devices`` selects the execution
+    backend (``repro.compat.resolve_devices``): ``None`` runs the whole
+    grid on one device, a count or device sequence shards the
+    (point × trace) lanes across host devices via ``shard_map``."""
 
     dt: Optional[float] = None
     window: Optional[int] = None
@@ -168,6 +175,7 @@ class ScanOptions:
     coalesce: Optional[int] = None
     dtype: Optional[np.dtype] = None
     devices: compat.Devices = None
+    kernel: str = "xla"
 
     def resolve(self, policy: str, leases: Sequence[float],
                 duration: float,
@@ -205,7 +213,8 @@ class ScanOptions:
             duration=duration,
             max_rounds=roundslib.round_budget(max_jobs, n_ws, duration,
                                               min(leases)),
-            window=window, ff_passes=ff, batch=batch)
+            window=window, ff_passes=ff, batch=batch,
+            kernel=self.kernel)
 
 
 def _build(p: SweepPoint):
@@ -664,6 +673,33 @@ def run_sweep_workloads(points: Sequence[SweepPoint],
                        lease_seconds=p.lease_seconds)
             rows[w][i] = row
     return rows                                   # type: ignore[return-value]
+
+
+def warmup_sweep(points: Sequence[SweepPoint],
+                 workloads: Sequence[Tuple[Sequence[Job],
+                                           Sequence[Tuple[float, int]]]],
+                 duration: Optional[float] = None, *, mode: str = "rounds",
+                 scan_options: ScanOptions = ScanOptions(),
+                 devices: compat.Devices = None) -> float:
+    """Prime every jit cache one (grid, workloads, mode, options)
+    configuration touches and return the priming call's wall seconds —
+    the compile cost the steady-state path then never pays again.
+
+    The fast paths' programs are cached on ``(policy, spec)`` keys that
+    include the rounds ``kernel`` backend and, for the sharded backend,
+    the device mesh (``rounds._rounds_lane`` / ``scan._sharded_lanes``),
+    so warming one configuration never evicts or aliases another. The
+    helper is ``jax.clear_caches()``-safe: nothing is memoized on wall
+    time or call order, so after a cache clear the next call simply
+    recompiles and re-primes — callers that need a cold-compile
+    measurement (``benchmarks/run.py sweep``'s ``compile_s`` column)
+    call ``jax.clear_caches()`` first and take this helper's return
+    value; live paths call it once at startup and pay ~0 afterwards.
+    """
+    t0 = time.time()
+    run_sweep_workloads(points, workloads, duration, mode=mode,
+                        scan_options=scan_options, devices=devices)
+    return time.time() - t0
 
 
 # ------------------------------------------------------------- paper grids

@@ -4,8 +4,10 @@ consolidation study, arXiv:0906.1346).
 
 One shared scenario generator drives random PBJ/WS traces and sweep
 points through ALL sweep engines — the per-point discrete-event
-reference, the fixed-dt scan, the event-round engine and its
-contended-stretch-coalesced variant — and asserts each engine's
+reference, the fixed-dt scan, the event-round engine, its
+contended-stretch-coalesced variant and its fused Pallas round-step
+backend (``kernel="pallas"``, bit-identical by contract) — and asserts
+each engine's
 fidelity contract from ``repro.sim.contracts`` (the same table the CI
 bench gate imports, so the gate and these tests cannot drift apart).
 
@@ -65,8 +67,10 @@ def scenario(seed: int):
 
 
 def run_engines(jobs, ws, coalesce=None):
-    """The shared fixture core: one scenario through all four engines.
-    Returns ``{engine_name: rows}`` aligned with POINTS."""
+    """The shared fixture core: one scenario through all the engines —
+    the event reference, the scan, the event-round engine, its
+    coalesced variant and its fused-Pallas-kernel backend. Returns
+    ``{engine_name: rows}`` aligned with POINTS."""
     opts = ScanOptions(window=WINDOW)
     out = {
         "event": run_sweep(POINTS, jobs, ws, DAY, mode="event"),
@@ -78,6 +82,9 @@ def run_engines(jobs, ws, coalesce=None):
             POINTS, jobs, ws, DAY, mode="rounds",
             scan_options=ScanOptions(window=WINDOW,
                                      coalesce=coalesce or 8)),
+        "rounds_pallas": run_sweep(
+            POINTS, jobs, ws, DAY, mode="rounds",
+            scan_options=ScanOptions(window=WINDOW, kernel="pallas")),
     }
     return out
 
@@ -99,7 +106,7 @@ def assert_contracts(engines: dict, label) -> None:
     import dataclasses
 
     ev = engines["event"]
-    for name in ("scan", "rounds", "rounds_coalesced"):
+    for name in ("scan", "rounds", "rounds_coalesced", "rounds_pallas"):
         rows = engines[name]
         for r in rows:
             assert r["window_overflow"] == 0, (label, name, r["system"])
@@ -141,6 +148,13 @@ def assert_contracts(engines: dict, label) -> None:
                                engines["rounds_coalesced"]):
         assert r_plain["peak_nodes"] == r_coal["peak_nodes"], (
             label, r_plain["system"])
+    # The fused Pallas backend is not merely within-contract: it runs
+    # the same _chunk_core math on a float-packed state, so its rows
+    # must equal the unfused rounds rows BIT-FOR-BIT.
+    assert engines["rounds_pallas"] == engines["rounds"], (
+        label, [(i, a, b) for i, (a, b) in
+                enumerate(zip(engines["rounds"],
+                              engines["rounds_pallas"])) if a != b][:2])
 
 
 @pytest.mark.parametrize("seed", range(4))
