@@ -32,6 +32,15 @@ and must stay silent on hosts without it. ``--kernel pallas`` adds a
 separated ``compile_s``/``run_s`` walls and held to the same rounds
 contract plus bit-identity to the unfused rows.
 
+``python -m benchmarks.run scenarios`` benchmarks the generated-scenario
+path: on-device trace synthesis (``repro.sim.scenarios``) + the batched
+(W, P) fold-table build vs the old host loop (numpy generators + the
+per-point reference fold), at lane widths ``--widths`` (default 45, 256
+and 1024), with ``--sample K`` lanes re-run on the event engine and held
+to the rounds contract, and a fold-table cache gate. Writes
+``results/BENCH_scenarios.json``; ``--check-contract`` makes contract or
+cache failures exit non-zero (the wide-lane CI leg).
+
 ``python -m benchmarks.run roundstep`` is the kernel microbenchmark:
 one fused vs one unfused outer step across vmapped lane widths
 (``--lanes``), bit-equality asserted at every width, written to
@@ -136,10 +145,14 @@ def sweep_benchmark(tiny: bool = False, devices: int = 0,
 
     if tiny:
         horizon = 2 * 24 * 3600.0
-        jobs = [j for j in traces.nasa_ipsc(seed=0) if j.submit < horizon]
-        ws = [(t, d) for t, d in traces.worldcup98(seed=0, peak_vms=64)
-              if t < horizon]
-        workloads = [(jobs, ws)]
+
+        def build_workloads():
+            jobs = [j for j in traces.nasa_ipsc(seed=0)
+                    if j.submit < horizon]
+            ws = [(t, d) for t, d in traces.worldcup98(seed=0, peak_vms=64)
+                  if t < horizon]
+            return [(jobs, ws)]
+
         points = [SweepPoint("fb", capacity=96, label="FB(C=96)"),
                   SweepPoint("fb", capacity=128, label="FB(C=128)"),
                   SweepPoint("flb_nub", lb_pbj=13, lb_ws=12,
@@ -149,15 +162,18 @@ def sweep_benchmark(tiny: bool = False, devices: int = 0,
                              label="FLB-NUB(L=30min)")]
     else:
         horizon = traces.TWO_WEEKS
-        ws_nasa = traces.worldcup98(seed=0, peak_vms=128)
-        # The multi-trace axis: both §6.2 batch logs plus a doubled WS
-        # demand variant of the World Cup profile.
-        workloads = [
-            (traces.nasa_ipsc(seed=0), ws_nasa),
-            (traces.sdsc_blue(seed=0), traces.worldcup98(seed=1,
-                                                         peak_vms=128)),
-            (traces.nasa_ipsc(seed=1), scale_profile(ws_nasa, 2.0)),
-        ]
+
+        def build_workloads():
+            ws_nasa = traces.worldcup98(seed=0, peak_vms=128)
+            # The multi-trace axis: both §6.2 batch logs plus a doubled
+            # WS demand variant of the World Cup profile.
+            return [
+                (traces.nasa_ipsc(seed=0), ws_nasa),
+                (traces.sdsc_blue(seed=0), traces.worldcup98(seed=1,
+                                                             peak_vms=128)),
+                (traces.nasa_ipsc(seed=1), scale_profile(ws_nasa, 2.0)),
+            ]
+
         dcs_size = 256
         points = (
             [SweepPoint("fb", capacity=int(round(dcs_size * f)),
@@ -171,9 +187,30 @@ def sweep_benchmark(tiny: bool = False, devices: int = 0,
                           label=f"FLB-NUB(L={m}min)")
                for m in (15, 30, 60, 120, 240)])             # Fig. 18
 
+    # Setup stage, timed honestly per engine family (the setup_s column
+    # the compile_s/run_s walls silently excluded): numpy trace
+    # synthesis, plus each family's host-side pack — job tables + WS
+    # profiles for the scan, job tables + WS fold tables for the rounds
+    # engines (cold fold-table cache per rep; the coalesced/pallas
+    # variants share the rounds pack — identical windows, identical
+    # arrays).
+    from repro.sim.rounds import fold_table_cache_clear
+    from repro.sim.sweep import _pack_rounds, _pack_scan
+    tracegen_s, workloads = _timed(build_workloads, reps=2)
+    scan_pack_s, _ = _timed(
+        lambda: _pack_scan(points, workloads, horizon, ScanOptions()),
+        reps=2)
+
+    def _rounds_setup():
+        fold_table_cache_clear()
+        return _pack_rounds(points, workloads, horizon, ScanOptions())
+
+    rounds_pack_s, _ = _timed(_rounds_setup, reps=2)
+
     n_evals = len(points) * len(workloads)
     out = {"grid": [p.name() for p in points],
-           "workloads": len(workloads), "evals": n_evals, "tiny": tiny}
+           "workloads": len(workloads), "evals": n_evals, "tiny": tiny,
+           "tracegen_s": round(tracegen_s, 4)}
 
     # The event engine has no compile step, so both runs are timed —
     # best-of-2 keeps the speedup_vs_event ratios symmetric with the
@@ -343,6 +380,19 @@ def sweep_benchmark(tiny: bool = False, devices: int = 0,
                 "points_per_sec": round(n_evals / psh_wall, 2),
                 "rows_match_pallas": pallas_sharded_match,
             }
+
+    # Every engine row reports its setup cost: trace synthesis for the
+    # event engine, plus the family's pack stage for the fast paths
+    # (sharded variants share their family's pack — the pack is
+    # device-count independent).
+    for key, engine in list(out.items()):
+        if isinstance(engine, dict) and "points_per_sec" in engine:
+            if key.startswith("scan"):
+                engine["setup_s"] = round(tracegen_s + scan_pack_s, 4)
+            elif key.startswith("rounds"):
+                engine["setup_s"] = round(tracegen_s + rounds_pack_s, 4)
+            else:                                  # the event engine
+                engine["setup_s"] = round(tracegen_s, 4)
 
     out["backend"] = {"devices": [str(d) for d in jax.devices()],
                       "cpu_count": os.cpu_count()}
@@ -537,6 +587,219 @@ def run_sweep_bench(argv) -> int:
     return rc
 
 
+def scenarios_benchmark(widths=(45, 256, 1024), tiny: bool = False,
+                        devices: int = 0, sample_n: int = 3,
+                        reps: int = 3) -> dict:
+    """Generated-scenario sweeps at growing lane widths: on-device
+    tracegen (``repro.sim.scenarios``) + batched fold tables vs the
+    host-loop baseline (numpy generators + the per-point reference
+    fold build), with the full sweep timed end-to-end through
+    ``run_sweep_workloads`` on the rounds engine and the PR 5
+    differential harness sampling lanes against the event engine.
+    Returns the BENCH_scenarios.json payload.
+
+    Per width the ledger separates ``gen_s`` (vmapped synthesis +
+    device transfer, steady state), ``pack_s`` (job-table padding +
+    rise compression + ONE batched (W, P) fold-table build),
+    ``compile_s`` and ``run_s``. ``run_s`` is a full
+    ``run_sweep_workloads`` call and therefore INCLUDES a fresh
+    synthesize + pack each rep — the end-to-end cost a sweep actually
+    pays. The host baseline is measured on ``host_lanes_measured``
+    lanes and extrapolated linearly (it is embarrassingly per-lane).
+    """
+    import numpy as np
+
+    import jax
+    from repro import compat
+    from repro.core.profiles import step_points
+    from repro.sim import traces
+    from repro.sim.contracts import CONTRACTS
+    from repro.sim.rounds import (_ws_fold_tables_ref,
+                                  fold_table_cache_clear,
+                                  fold_table_cache_info)
+    from repro.sim.scenarios import (PBJParams, ScenarioGrid, WSParams,
+                                     sample_workloads, synthesize)
+    from repro.sim.sweep import (ScanOptions, SweepPoint,
+                                 _pack_scenarios_grids,
+                                 run_sweep_workloads)
+
+    if devices:
+        compat.resolve_devices(devices)
+
+    duration = 2 * 24 * 3600.0 if tiny else traces.TWO_WEEKS
+    max_jobs = 400 if tiny else 3000
+    points = [SweepPoint("fb", capacity=96, label="FB(C=96)"),
+              SweepPoint("fb", capacity=128, label="FB(C=128)"),
+              SweepPoint("fb", capacity=160, label="FB(C=160)"),
+              SweepPoint("flb_nub", lb_pbj=13, lb_ws=12,
+                         label="FLB-NUB(B=25)"),
+              SweepPoint("flb_nub", lb_pbj=13, lb_ws=12,
+                         lease_seconds=1800.0, label="FLB-NUB(L=30min)")]
+    fb_leases = np.array([3600.0, 3600.0, 3600.0])
+    fb_levels = np.array([96.0, 128.0, 160.0])
+    flb_leases = np.array([3600.0, 1800.0])
+    flb_levels = np.array([12.0, 12.0])
+    opts = ScanOptions(devices=devices if devices >= 2 else None)
+    P = len(points)
+
+    out = {"tiny": tiny, "duration_s": duration, "max_jobs": max_jobs,
+           "grid": [p.name() for p in points], "devices": devices,
+           "backend": {"devices": [str(d) for d in jax.devices()],
+                       "cpu_count": os.cpu_count()},
+           "note": ("setup = gen (vmapped on-device synthesis, steady "
+                    "state after one compile) + pack (batched fold "
+                    "tables); host baseline = numpy tracegen + the "
+                    "reference per-point fold loop per lane, measured "
+                    "on a few lanes and scaled linearly. run_s re-runs "
+                    "the FULL pipeline (synthesize + pack + engine) "
+                    "per rep"),
+           "widths": []}
+
+    for width in widths:
+        W = max(1, int(round(width / P)))
+        lo, hi = (250.0, 380.0) if tiny else (1800.0, 2900.0)
+        pbj = PBJParams(
+            nodes=128.0,
+            utilization=np.linspace(0.35, 0.8, W),
+            n_jobs=np.round(np.linspace(lo, hi, W)),
+            alpha=np.linspace(0.15, 0.7, W),
+            burst_frac=np.linspace(0.06, 0.25, W),
+            diurnal_depth=np.linspace(0.5, 0.95, W))
+        ws = WSParams(peak=np.round(np.linspace(32.0, 128.0, W)),
+                      base_mean=np.linspace(8.0, 14.0, W),
+                      surge_ratio=np.linspace(2.0, 6.0, W))
+        grid = ScenarioGrid(seeds=tuple(range(W)), pbj=pbj, ws=ws,
+                            duration=duration, max_jobs=max_jobs)
+
+        synth = synthesize(grid)                  # compile + warm
+        gen_s, synth = _timed(lambda: synthesize(grid), reps=reps)
+        pack_s, _ = _timed(
+            lambda: _pack_scenarios_grids(points, grid, synth, opts),
+            reps=reps)
+        setup_s = gen_s + pack_s
+
+        # Host-loop baseline: per-lane numpy synthesis + the reference
+        # per-point fold build, exactly what pack_event_workloads did
+        # before the batched rewrite.
+        nb = min(W, 8)
+
+        def host_setup():
+            for w in range(nb):
+                [j for j in traces.nasa_ipsc(seed=w)
+                 if j.submit < duration]
+                wtrace = [(t, d) for t, d in traces.worldcup98(seed=w)
+                          if t < duration]
+                times, values = step_points(wtrace, duration)
+                _ws_fold_tables_ref(times, values, duration, "fb",
+                                    fb_leases, fb_levels)
+                _ws_fold_tables_ref(times, values, duration, "flb_nub",
+                                    flb_leases, flb_levels)
+
+        host_nb_s, _ = _timed(host_setup, reps=1)
+        host_setup_s = host_nb_s * (W / nb)
+
+        t0 = time.time()
+        rows = run_sweep_workloads(points, grid, mode="rounds",
+                                   scan_options=opts)
+        compile_plus_run = time.time() - t0
+        run_s, rows = _timed(
+            lambda: run_sweep_workloads(points, grid, mode="rounds",
+                                        scan_options=opts),
+            reps=max(2, reps - 1))
+
+        # Sampled-lane differential: a few lanes re-run on the event
+        # engine, the generated rows held to the rounds contract.
+        sample = sorted({0, W // 2, W - 1})[:max(1, sample_n)]
+        host_lanes = sample_workloads(synth, sample)
+        ev_rows = run_sweep_workloads(points, host_lanes, duration,
+                                      mode="event")
+        violations = []
+        for j, w in enumerate(sample):
+            for i in range(P):
+                violations += [
+                    f"lane {w} {v}" for v in
+                    CONTRACTS["rounds"].check_row(rows[w][i],
+                                                  ev_rows[j][i])]
+
+        # Fold-table cache: re-packing the same sampled lanes (as the
+        # differential harness and the multi-engine benchmark do per
+        # engine column) must hit, not recompute.
+        fold_table_cache_clear()
+        run_sweep_workloads(points, host_lanes, duration, mode="rounds")
+        run_sweep_workloads(points, host_lanes, duration, mode="rounds")
+        ci = fold_table_cache_info()
+        cache = {"hits": ci.hits, "misses": ci.misses}
+
+        out["widths"].append({
+            "width": width, "lanes": W * P, "traces": W,
+            "gen_s": round(gen_s, 4), "pack_s": round(pack_s, 4),
+            "setup_s": round(setup_s, 4),
+            "setup_per_point_ms": round(1e3 * setup_s / (W * P), 4),
+            "host_setup_s": round(host_setup_s, 4),
+            "host_lanes_measured": nb,
+            "setup_speedup_vs_host": round(
+                host_setup_s / max(setup_s, 1e-9), 2),
+            "compile_plus_run_s": round(compile_plus_run, 4),
+            "compile_s": round(max(compile_plus_run - run_s, 0.0), 4),
+            "run_s": round(run_s, 4),
+            "points_per_sec": round(W * P / run_s, 2),
+            "sampled_lanes": [int(s) for s in sample],
+            "contract_violations": violations,
+            "contract_ok": not violations,
+            "fold_cache": cache,
+            "fold_cache_ok": cache["hits"] >= 1,
+        })
+    return out
+
+
+def run_scenarios_bench(argv) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.run scenarios")
+    ap.add_argument("--widths", type=int, nargs="+",
+                    default=[45, 256, 1024], metavar="N",
+                    help="(point x trace) lane widths to sweep")
+    ap.add_argument("--tiny", action="store_true",
+                    help="two-day horizon, ~350-job lanes (CI smoke)")
+    ap.add_argument("--devices", type=int, default=0, metavar="N",
+                    help="shard the generated sweep over N host devices "
+                    "(forces N XLA CPU devices when jax is not yet "
+                    "loaded)")
+    ap.add_argument("--sample", type=int, default=3, metavar="K",
+                    help="lanes per width re-run on the event engine "
+                    "for the differential contract")
+    ap.add_argument("--check-contract", action="store_true",
+                    help="exit 1 unless every width's sampled-lane "
+                    "rounds contract is green and the fold-table cache "
+                    "registered hits")
+    ap.add_argument("--out", default="results/BENCH_scenarios.json")
+    args = ap.parse_args(argv)
+    if args.devices >= 2:
+        from repro.hostdev import force_host_device_count
+        force_host_device_count(args.devices)
+    out = scenarios_benchmark(widths=tuple(args.widths), tiny=args.tiny,
+                              devices=args.devices, sample_n=args.sample)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    rc = 0
+    for row in out["widths"]:
+        print(f"width={row['width']} lanes={row['lanes']} "
+              f"setup={row['setup_s']}s (gen {row['gen_s']}s + pack "
+              f"{row['pack_s']}s, {row['setup_per_point_ms']}ms/pt, "
+              f"{row['setup_speedup_vs_host']}x host) "
+              f"compile={row['compile_s']}s run={row['run_s']}s "
+              f"({row['points_per_sec']} pts/s) "
+              f"contract_ok={row['contract_ok']} "
+              f"cache_hits={row['fold_cache']['hits']}")
+        if args.check_contract and not (row["contract_ok"]
+                                        and row["fold_cache_ok"]):
+            print(f"SCENARIOS GATE FAILED at width {row['width']}: "
+                  f"violations={row['contract_violations']} "
+                  f"fold_cache={row['fold_cache']}", file=sys.stderr)
+            rc = 1
+    print(f"# -> {args.out}")
+    return rc
+
+
 def roundstep_benchmark(lane_widths=(1, 4, 16, 64), reps: int = 3) -> dict:
     """Microbenchmark of the fused Pallas round-step kernel vs the
     unfused traced body: ONE outer step (compaction + admission + the
@@ -667,4 +930,6 @@ if __name__ == "__main__":
         sys.exit(run_sweep_bench(sys.argv[2:]))
     if len(sys.argv) > 1 and sys.argv[1] == "roundstep":
         sys.exit(run_roundstep_bench(sys.argv[2:]))
+    if len(sys.argv) > 1 and sys.argv[1] == "scenarios":
+        sys.exit(run_scenarios_bench(sys.argv[2:]))
     main()

@@ -30,7 +30,7 @@ except AttributeError:
     _CHECK_KWARG = "check_rep"
 
 __all__ = ["shard_map", "axis_size", "resolve_devices", "jit",
-           "supports_donation"]
+           "supports_donation", "resolve_pack_dtype"]
 
 # Backends with working input-output aliasing. XLA:CPU parses the
 # aliasing hint but does not consume it — every donated call would warn
@@ -79,6 +79,23 @@ def jit(fn=None, *, donate_argnums=(), platform: Optional[str] = None,
         return jitted[0](*args, **kw)
 
     return wrapper
+
+def resolve_pack_dtype(dtype=None):
+    """Default a packing dtype to the active jax x64 setting; reject a
+    float64 request that ``jnp.asarray`` would silently downcast. The
+    one canonical copy for every pack path (``repro.sim.scan``,
+    ``repro.sim.rounds``, ``repro.sim.scenarios``,
+    ``repro.core.jaxsim``)."""
+    import numpy as np
+    if dtype is None:
+        return np.float64 if jax.config.jax_enable_x64 else np.float32
+    if np.dtype(dtype) == np.float64 and not jax.config.jax_enable_x64:
+        raise ValueError(
+            "dtype=float64 requested with jax x64 disabled — jnp.asarray "
+            "would silently downcast to float32; wrap the call in "
+            "jax.experimental.enable_x64()")
+    return np.dtype(dtype)
+
 
 # The devices argument accepted across the repo's sharded entry points:
 # a device count, an explicit device sequence, or None (single-device).

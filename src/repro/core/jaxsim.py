@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core.jobs import Job
 from repro.core.profiles import per_tick_profile
 
@@ -67,13 +68,7 @@ def pack_trace(jobs: Sequence[Job], ws_trace: Sequence[Tuple[float, int]],
     exact paths under, float32 otherwise — so scan-vs-event comparisons
     are never limited by the packing precision.
     """
-    if dtype is None:
-        dtype = np.float64 if jax.config.jax_enable_x64 else np.float32
-    elif np.dtype(dtype) == np.float64 and not jax.config.jax_enable_x64:
-        raise ValueError(
-            "dtype=float64 requested with jax x64 disabled — jnp.asarray "
-            "would silently downcast to float32; wrap the call in "
-            "jax.experimental.enable_x64()")
+    dtype = compat.resolve_pack_dtype(dtype)
     dt = lease_seconds / substeps
     n_steps = int(np.ceil(duration / dt))
     submit = np.array([j.submit for j in jobs], dtype)

@@ -190,18 +190,9 @@ for _cls, _fields in ((FBGrid, ["capacity", "lease"]),
 
 # ------------------------------------------------------------------ packing
 
-def resolve_pack_dtype(dtype: Optional[np.dtype]) -> np.dtype:
-    """Default the packing dtype to the active jax x64 setting, like
-    :func:`repro.core.jaxsim.pack_trace`; reject a float64 request that
-    jnp.asarray would silently downcast."""
-    if dtype is None:
-        return np.float64 if jax.config.jax_enable_x64 else np.float32
-    if np.dtype(dtype) == np.float64 and not jax.config.jax_enable_x64:
-        raise ValueError(
-            "dtype=float64 requested with jax x64 disabled — jnp.asarray "
-            "would silently downcast to float32; wrap the call in "
-            "jax.experimental.enable_x64()")
-    return np.dtype(dtype)
+# Canonical copy lives in repro.compat; re-exported here because every
+# pack caller historically imports it from the scan module.
+resolve_pack_dtype = compat.resolve_pack_dtype
 
 
 def pack_job_table(workloads: Sequence[Tuple[Sequence[Job],

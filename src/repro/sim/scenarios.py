@@ -1,0 +1,385 @@
+"""On-device scenario synthesis: vmapped generator families for PBJ job
+tables and WS demand series, parameterized far beyond the three paper
+traces.
+
+``repro.sim.traces`` synthesizes exactly the paper's three workloads in
+host-side numpy — fine for the 45-eval paper grids, but the batched
+engines only pay off at lane widths where host tracegen becomes the
+floor. This module ports the synthesis recipes into JAX as per-lane-PRNG
+generator families:
+
+* :func:`synth_pbj` — parallel-batch-job tables (bursty diurnal
+  arrivals, power-of-two size classes, heavy-tailed lognormal runtimes,
+  exact-utilization rescale), parameterized by utilization, job count,
+  runtime/size coupling ``alpha``, size-class probabilities, diurnal
+  depth, weekend factor and burst fraction;
+* :func:`synth_ws` — web-server VM-demand step series (diurnal base +
+  noise + flash-crowd trapezoid surges, exact integer peak),
+  parameterized by peak, base level, diurnal amplitude, noise and the
+  surge ratio/length the load-balancing surveys call out.
+
+The numpy generators stay as the fidelity reference: the paper traces
+are re-expressible as parameter points (:data:`NASA_IPSC_PBJ`,
+:data:`SDSC_BLUE_PBJ`, :data:`WORLDCUP_WS`) whose moments property-tests
+match against the ``TraceSpec`` targets. The *microstructure* deliberately
+differs where numpy idioms don't vectorize: arrivals sample an
+inverse-CDF of the binned diurnal intensity instead of rejection
+thinning (rejection is shape-dynamic, unusable under jit/vmap), burst
+membership is per-job Bernoulli over a fixed episode pool instead of a
+multinomial, and the iPSC nightly full-machine snap is dropped (an
+archive-specific quirk, not a moment the paper uses).
+
+Batch plumbing: :class:`ScenarioGrid` names a (seeds × params) lane
+batch, :func:`synthesize` runs one jitted vmap over all lanes and pulls
+the arrays host-side in one transfer, :func:`pack_scenarios` turns the
+batch into a :class:`repro.sim.rounds.PackedEventWorkloads` (job-table
+padding + change-point compression + ONE
+:func:`~repro.sim.rounds.ws_fold_tables_batch` call for all (W, P)
+lanes), and :func:`sample_workloads` materializes chosen lanes as
+``(List[Job], ws_trace)`` for the event-engine differential harness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import resolve_pack_dtype
+from repro.core.jobs import Job
+from repro.sim.rounds import PackedEventWorkloads, ws_fold_tables_batch
+from repro.sim.traces import TWO_WEEKS
+
+__all__ = [
+    "PBJParams", "WSParams", "ScenarioGrid", "SynthesizedBatch",
+    "NASA_IPSC_PBJ", "SDSC_BLUE_PBJ", "WORLDCUP_WS",
+    "synth_pbj", "synth_ws", "lane_keys", "synthesize",
+    "pack_scenarios", "sample_workloads",
+]
+
+_ARR_BINS = 2048        # arrival-intensity CDF resolution (~10 min bins)
+_BURST_EPISODES = 32    # flash-burst episode pool per lane
+_BURST_TAU = 180.0      # burst intra-episode spread (s), like the numpy gen
+_WS_SURGES = 12         # flash-crowd surge pool (12 matches in the paper)
+_N_SIZE_CLASSES = 8     # power-of-two size classes 1 .. 128
+
+
+@dataclasses.dataclass(frozen=True)
+class PBJParams:
+    """Generator parameters for one PBJ lane (all leaves float — scalars
+    broadcast across a :class:`ScenarioGrid`, per-lane ``(W,)`` arrays
+    sweep the axis)."""
+
+    nodes: object = 128.0          # cluster size == size cap
+    utilization: object = 0.466    # pinned exactly by the rescale
+    n_jobs: object = 2603.0        # completed-job count (exact)
+    alpha: object = 0.68           # mean runtime ∝ size^alpha
+    sigma: object = 1.0            # lognormal runtime spread
+    diurnal_depth: object = 0.95   # arrival-rate day/night swing (0..1)
+    weekend_factor: object = 0.35  # weekend arrival-rate multiplier
+    burst_frac: object = 0.12      # fraction of jobs arriving in bursts
+    size_probs: object = (.20, .15, .13, .12, .12, .12, .13, .03)
+
+
+@dataclasses.dataclass(frozen=True)
+class WSParams:
+    """Generator parameters for one WS demand lane."""
+
+    peak: object = 64.0            # exact integer peak after rescale
+    base_mean: object = 10.0       # diurnal base level (VMs)
+    diurnal_amp: object = 0.6      # base swings base_mean·(1 ± amp)
+    noise_std: object = 0.8        # per-step jitter (VMs)
+    surge_ratio: object = 4.0      # surge amplitude / base_mean
+    surge_hours: object = 2.5      # nominal surge length (hours)
+
+
+for _cls, _fields in ((PBJParams, [f.name for f in
+                                   dataclasses.fields(PBJParams)]),
+                      (WSParams, [f.name for f in
+                                  dataclasses.fields(WSParams)])):
+    jax.tree_util.register_dataclass(_cls, data_fields=_fields,
+                                     meta_fields=[])
+
+# The paper traces as parameter points (moment targets in
+# repro.sim.traces: NASA_IPSC / SDSC_BLUE TraceSpecs, worldcup98).
+NASA_IPSC_PBJ = PBJParams()
+SDSC_BLUE_PBJ = PBJParams(nodes=144.0, utilization=0.762, n_jobs=2657.0,
+                          alpha=0.15)
+WORLDCUP_WS = WSParams(surge_ratio=4.0, surge_hours=2.5)
+
+
+# ------------------------------------------------------------- generators
+
+def _arrival_cdf(duration: float, depth, weekend_factor) -> jnp.ndarray:
+    """CDF of the binned diurnal×weekend arrival intensity — the same
+    shape the numpy generator realizes by rejection thinning:
+    ``rate ∝ max(1 + depth·sin(work-day phase), 0)``, weekends damped."""
+    t = (jnp.arange(_ARR_BINS) + 0.5) * (duration / _ARR_BINS)
+    phase = 2 * jnp.pi * ((t % 86400.0) / 86400.0 - 0.375)
+    rate = jnp.maximum(1.0 + depth * jnp.sin(phase), 0.0)
+    weekend = ((t // 86400.0).astype(jnp.int32) % 7) >= 5
+    rate = jnp.where(weekend, rate * weekend_factor, rate) + 1e-9
+    cdf = jnp.cumsum(rate)
+    return cdf / cdf[-1]
+
+
+def _inv_cdf(u: jnp.ndarray, cdf: jnp.ndarray,
+             duration: float) -> jnp.ndarray:
+    """Inverse-CDF sample: bin by binary search, uniform within bin."""
+    idx = jnp.minimum(jnp.searchsorted(cdf, u, side="left"), _ARR_BINS - 1)
+    lo = jnp.where(idx > 0, cdf[jnp.maximum(idx - 1, 0)], 0.0)
+    frac = jnp.clip((u - lo) / jnp.maximum(cdf[idx] - lo, 1e-12), 0.0, 1.0)
+    return (idx + frac) * (duration / _ARR_BINS)
+
+
+def synth_pbj(key: jax.Array, params: PBJParams, *, max_jobs: int,
+              duration: float = TWO_WEEKS
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One lane's PBJ job table, on device.
+
+    Returns arrival-sorted ``(submit, size, runtime, n_jobs)`` of fixed
+    shape ``(max_jobs,)`` — rows past ``n_jobs`` carry the pack padding
+    convention (``submit=+inf``, size/runtime 0), so the output drops
+    straight into a job-table pack. Deterministic per ``key``; designed
+    to be vmapped over ``(keys, params)`` lanes.
+    """
+    kt, kb, ke, kd, kf, ks, kr = jax.random.split(key, 7)
+    cdf = _arrival_cdf(duration, params.diurnal_depth,
+                       params.weekend_factor)
+    base_t = _inv_cdf(jax.random.uniform(kt, (max_jobs,)), cdf, duration)
+    centers = _inv_cdf(jax.random.uniform(kb, (_BURST_EPISODES,)), cdf,
+                       duration)
+    episode = jax.random.randint(ke, (max_jobs,), 0, _BURST_EPISODES)
+    delay = _BURST_TAU * jax.random.exponential(kd, (max_jobs,))
+    burst = jax.random.uniform(kf, (max_jobs,)) < params.burst_frac
+    submit = jnp.clip(jnp.where(burst, centers[episode] + delay, base_t),
+                      0.0, duration - 1.0)
+    probs = jnp.asarray(params.size_probs)
+    exps = jax.random.categorical(ks, jnp.log(probs + 1e-12),
+                                  shape=(max_jobs,))
+    size = jnp.minimum(2.0 ** exps, params.nodes)
+    # Lognormal runtimes, mean ∝ size^alpha; one global rescale pins
+    # utilization exactly (Σ size·rt over real jobs = util·nodes·T),
+    # like the numpy generator.
+    mu = params.alpha * jnp.log(size) - params.sigma ** 2 / 2
+    rt = jnp.exp(mu + params.sigma * jax.random.normal(kr, (max_jobs,)))
+    valid = jnp.arange(max_jobs) < params.n_jobs
+    target = params.utilization * params.nodes * duration
+    rt = rt * (target / jnp.sum(jnp.where(valid, size * rt, 0.0)))
+    rt = jnp.maximum(rt, 1.0)
+    submit = jnp.where(valid, submit, jnp.inf)
+    order = jnp.argsort(submit)
+    size = jnp.where(valid, size, 0.0)[order].astype(jnp.int32)
+    runtime = jnp.where(valid, rt, 0.0)[order]
+    return (submit[order], size, runtime,
+            jnp.asarray(params.n_jobs, jnp.int32))
+
+
+def synth_ws(key: jax.Array, params: WSParams, *, n_steps: int,
+             step_seconds: float = 300.0) -> jnp.ndarray:
+    """One lane's WS VM-demand series on the dense step grid
+    ``t_i = i·step_seconds``: diurnal base + noise + flash-crowd
+    trapezoid surges, rescaled so the peak is exactly ``params.peak``
+    (integer) and the floor is 1 VM. Returns ``(n_steps,)`` demands."""
+    kn, kday, kh, kl, ka = jax.random.split(key, 5)
+    t = jnp.arange(n_steps) * step_seconds
+    day = (t % 86400.0) / 86400.0
+    base = params.base_mean * (
+        1.0 + params.diurnal_amp * jnp.sin(2 * jnp.pi * (day - 0.3)))
+    base = base + params.noise_std * jax.random.normal(kn, (n_steps,))
+    n_days = max(int(n_steps * step_seconds // 86400.0), 2)
+    days = jax.random.randint(kday, (_WS_SURGES,), 1, n_days)
+    start = days * 86400.0 + 3600.0 * jax.random.uniform(
+        kh, (_WS_SURGES,), minval=12.0, maxval=20.0)
+    length = 3600.0 * params.surge_hours * jax.random.uniform(
+        kl, (_WS_SURGES,), minval=0.6, maxval=1.4)
+    amp = params.surge_ratio * params.base_mean * jax.random.uniform(
+        ka, (_WS_SURGES,), minval=0.5, maxval=1.0)
+    ramp = 0.22 * length
+    rel = t[None, :] - start[:, None]
+    up = jnp.clip(rel / ramp[:, None], 0.0, 1.0)
+    down = jnp.clip((length[:, None] - rel) / ramp[:, None], 0.0, 1.0)
+    demand = jnp.maximum(base + jnp.sum(amp[:, None] *
+                                        jnp.minimum(up, down), axis=0), 1.0)
+    # Exact integer peak: the max maps to peak·(1 ± ulp), every other
+    # point strictly below, so round() pins max(demand) == peak.
+    demand = demand * (params.peak / jnp.max(demand))
+    return jnp.maximum(jnp.round(demand), 1.0)
+
+
+# ----------------------------------------------------------- batch plumbing
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioGrid:
+    """A (seeds × params) lane batch: lane ``w`` draws from
+    ``seeds[w]`` with the ``w``-th slice of each parameter axis
+    (scalar params broadcast). ``max_jobs`` fixes the job-table height;
+    ``ws_step`` the WS demand grid (300 s, like worldcup98)."""
+
+    seeds: Tuple[int, ...]
+    pbj: PBJParams = NASA_IPSC_PBJ
+    ws: WSParams = WORLDCUP_WS
+    duration: float = TWO_WEEKS
+    max_jobs: int = 3000
+    ws_step: float = 300.0
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self.seeds)
+
+    @property
+    def n_ws_steps(self) -> int:
+        return int(np.ceil(self.duration / self.ws_step))
+
+
+@dataclasses.dataclass(frozen=True)
+class SynthesizedBatch:
+    """Host-side arrays for W generated lanes (one device transfer)."""
+
+    submit: np.ndarray      # (W, max_jobs) arrival-sorted, +inf padded
+    size: np.ndarray        # (W, max_jobs) int32
+    runtime: np.ndarray     # (W, max_jobs)
+    n_jobs: np.ndarray      # (W,) int32
+    ws_times: np.ndarray    # (S,) dense step grid, shared by all lanes
+    ws_values: np.ndarray   # (W, S) integer demands
+    duration: float
+
+
+_PARAM_BASE_NDIM = {"size_probs": 1}
+
+
+def _broadcast_params(params, n_lanes: int):
+    """Broadcast each scalar leaf to ``(W,)`` (``size_probs`` to
+    ``(W, 8)``) so one ``in_axes=0`` vmap sweeps every axis; per-lane
+    arrays pass through after a width check."""
+    def one(name: str, leaf):
+        base = _PARAM_BASE_NDIM.get(name, 0)
+        a = np.asarray(leaf, np.float32)
+        if a.ndim == base:
+            a = np.broadcast_to(a, (n_lanes,) + a.shape)
+        elif a.shape[0] != n_lanes:
+            raise ValueError(
+                f"param {name!r} has leading dim {a.shape[0]}, expected "
+                f"scalar or {n_lanes} lanes")
+        return jnp.asarray(a)
+
+    return type(params)(**{f.name: one(f.name, getattr(params, f.name))
+                           for f in dataclasses.fields(params)})
+
+
+def lane_keys(seeds: Sequence[int]) -> jnp.ndarray:
+    """Per-lane (pbj, ws) key pairs, ``(W, 2)`` stacked — lane ``w`` is
+    exactly ``jax.random.split(PRNGKey(seeds[w]))``, so K vmapped lanes
+    bit-match K single-key generator calls."""
+    return jax.vmap(lambda s: jax.random.split(jax.random.PRNGKey(s)))(
+        jnp.asarray(list(seeds), jnp.uint32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_jobs", "n_steps", "duration",
+                                    "ws_step"))
+def _synth_batch(keys, pbj, ws, *, max_jobs, n_steps, duration, ws_step):
+    submit, size, runtime, n_jobs = jax.vmap(
+        lambda k, p: synth_pbj(k, p, max_jobs=max_jobs,
+                               duration=duration))(keys[:, 0], pbj)
+    ws_vals = jax.vmap(
+        lambda k, p: synth_ws(k, p, n_steps=n_steps,
+                              step_seconds=ws_step))(keys[:, 1], ws)
+    return submit, size, runtime, n_jobs, ws_vals
+
+
+def synthesize(grid: ScenarioGrid) -> SynthesizedBatch:
+    """Generate every lane of ``grid`` in one jitted vmap and pull the
+    batch host-side in a single transfer."""
+    W = grid.n_lanes
+    out = _synth_batch(lane_keys(grid.seeds),
+                       _broadcast_params(grid.pbj, W),
+                       _broadcast_params(grid.ws, W),
+                       max_jobs=grid.max_jobs, n_steps=grid.n_ws_steps,
+                       duration=float(grid.duration),
+                       ws_step=float(grid.ws_step))
+    submit, size, runtime, n_jobs, ws_vals = jax.device_get(out)
+    ws_times = np.arange(grid.n_ws_steps, dtype=np.float64) * grid.ws_step
+    return SynthesizedBatch(submit=submit, size=size, runtime=runtime,
+                            n_jobs=n_jobs, ws_times=ws_times,
+                            ws_values=ws_vals,
+                            duration=float(grid.duration))
+
+
+def pack_scenarios(synth: SynthesizedBatch, window: int, policy: str,
+                   leases: Sequence[float], levels: Sequence[float],
+                   dtype=None) -> PackedEventWorkloads:
+    """Pack a synthesized batch for one policy's sweep points — the
+    generated-lane counterpart of
+    :func:`repro.sim.rounds.pack_event_workloads`, with every
+    per-workload host loop replaced by array ops: job tables append the
+    window padding block, rise stops compress by an argsort of the
+    masked dense grid, and the WS fold tables build in ONE
+    :func:`~repro.sim.rounds.ws_fold_tables_batch` call over all
+    (W, P) lanes."""
+    dtype = resolve_pack_dtype(dtype)
+    W, J = synth.submit.shape
+    pad = np.full((W, window), np.inf, dtype)
+    zpad = np.zeros((W, window), dtype)
+    submit = np.concatenate([synth.submit.astype(dtype), pad], axis=1)
+    size = np.concatenate([synth.size.astype(dtype), zpad], axis=1)
+    runtime = np.concatenate([synth.runtime.astype(dtype), zpad], axis=1)
+    times = synth.ws_times.astype(np.float64)
+    vals = synth.ws_values.astype(np.float64)
+    ws0 = vals[:, 0]
+    changed = vals[:, 1:] != vals[:, :-1]
+    ws_adjusts = changed.sum(axis=1) + (vals[:, 0] > 0)
+    up = np.zeros(vals.shape, bool)
+    up[:, 1:] = vals[:, 1:] > vals[:, :-1]
+    nr = int(up.sum(axis=1).max()) + 1        # +inf sentinel
+    masked_t = np.where(up, times[None, :], np.inf)
+    order = np.argsort(masked_t, axis=1)[:, :nr]
+    rise_times = np.take_along_axis(masked_t, order, axis=1)
+    rise_vals = np.where(np.take_along_axis(up, order, axis=1),
+                         np.take_along_axis(vals, order, axis=1), 0.0)
+    # The dense grid's no-op points are value-identical for the fold
+    # tables (equal adjacent segments merge in the integral, maxima and
+    # boundary gathers are unchanged), so no per-lane compression pass.
+    integral, winmax, at_tick = ws_fold_tables_batch(
+        times, vals, synth.duration, policy,
+        np.asarray(leases, np.float64), np.asarray(levels, np.float64))
+    return PackedEventWorkloads(
+        submit=jnp.asarray(submit), size=jnp.asarray(size),
+        runtime=jnp.asarray(runtime),
+        ws0=jnp.asarray(ws0.astype(dtype)),
+        ws_adjusts=jnp.asarray(ws_adjusts.astype(dtype)),
+        rise_times=jnp.asarray(rise_times.astype(dtype)),
+        rise_vals=jnp.asarray(rise_vals.astype(dtype)),
+        ws_integral=jnp.asarray(integral.astype(dtype)),
+        ws_winmax=jnp.asarray(winmax.astype(dtype)),
+        ws_at_tick=jnp.asarray(at_tick.astype(dtype)),
+        n_jobs=jnp.asarray(synth.n_jobs.astype(np.int32)))
+
+
+def sample_workloads(synth: SynthesizedBatch,
+                     indices: Sequence[int]
+                     ) -> List[Tuple[List[Job], List[Tuple[float, int]]]]:
+    """Materialize chosen lanes as ``(List[Job], ws_trace)`` for the
+    event-engine differential harness — float32 values round-trip
+    exactly through Python floats, so the event engine sees the very
+    numbers the packed batch carries."""
+    out = []
+    for w in indices:
+        n = int(synth.n_jobs[w])
+        jobs = [Job(jid=i, submit=float(synth.submit[w, i]),
+                    size=int(synth.size[w, i]),
+                    runtime=float(synth.runtime[w, i]))
+                for i in range(n)]
+        vals = synth.ws_values[w]
+        trace: List[Tuple[float, int]] = [(0.0, int(vals[0]))]
+        for i in range(1, len(vals)):
+            d = int(vals[i])
+            if d != trace[-1][1]:
+                trace.append((float(synth.ws_times[i]), d))
+        out.append((jobs, trace))
+    return out

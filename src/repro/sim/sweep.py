@@ -441,19 +441,14 @@ def _warn_diagnostics(per_workload: List[List[Dict]], engine: str) -> None:
             stacklevel=3)
 
 
-def _sweep_scan(points: List[SweepPoint],
-                workloads: Sequence[Tuple[Sequence[Job],
-                                          Sequence[Tuple[float, int]]]],
-                duration: float,
-                options: ScanOptions) -> List[List[Dict]]:
-    """FB and FLB-NUB points through the batched ``lax.scan`` fast path.
-
-    Returns one row list per workload, each aligned with ``points``
-    (which must all be scan-eligible systems). The whole
-    (policy, point, workload) grid is one jitted XLA program.
-    """
-    assert all(p.system in _SCANNABLE for p in points)
-    _reject_preempt(points, "scan")
+def _pack_scan(points: List[SweepPoint],
+               workloads: Sequence[Tuple[Sequence[Job],
+                                         Sequence[Tuple[float, int]]]],
+               duration: float, options: ScanOptions):
+    """Host-side setup stage of the scan path: trace packing + grid
+    construction. Factored out of :func:`_sweep_scan` so
+    ``benchmarks/run.py`` can time setup separately from compile/run
+    (the ``setup_s`` ledger column)."""
     fb_idx = [i for i, p in enumerate(points) if p.system == "fb"]
     flb_idx = [i for i, p in enumerate(points) if p.system == "flb_nub"]
     ws_traces = [ws for _, ws in workloads]
@@ -474,6 +469,24 @@ def _sweep_scan(points: List[SweepPoint],
             workloads, duration, flb_spec.dt, window=flb_spec.window,
             chunk_len=flb_spec.chunk_len, dtype=options.dtype)
         flb = _flb_grid(points, flb_idx, flb_packed.ws.dtype)
+    return fb_idx, flb_idx, fb, flb, fb_packed, flb_packed, fb_spec, flb_spec
+
+
+def _sweep_scan(points: List[SweepPoint],
+                workloads: Sequence[Tuple[Sequence[Job],
+                                          Sequence[Tuple[float, int]]]],
+                duration: float,
+                options: ScanOptions) -> List[List[Dict]]:
+    """FB and FLB-NUB points through the batched ``lax.scan`` fast path.
+
+    Returns one row list per workload, each aligned with ``points``
+    (which must all be scan-eligible systems). The whole
+    (policy, point, workload) grid is one jitted XLA program.
+    """
+    assert all(p.system in _SCANNABLE for p in points)
+    _reject_preempt(points, "scan")
+    (fb_idx, flb_idx, fb, flb, fb_packed, flb_packed,
+     fb_spec, flb_spec) = _pack_scan(points, workloads, duration, options)
 
     out = scanlib.scan_grids(fb, flb, fb_packed, flb_packed,
                              fb_spec=fb_spec, flb_spec=flb_spec,
@@ -485,26 +498,12 @@ def _sweep_scan(points: List[SweepPoint],
     return rows
 
 
-def _sweep_rounds(points: List[SweepPoint],
-                  workloads: Sequence[Tuple[Sequence[Job],
-                                            Sequence[Tuple[float, int]]]],
-                  duration: float,
-                  options: ScanOptions) -> List[List[Dict]]:
-    """FB and FLB-NUB points through the event-round fast path
-    (``repro.sim.rounds``): adaptive jump-to-next-event steps with
-    exact completions, batched over sweep points like the scan.
-
-    Workload traces run as *separate* invocations of the same compiled
-    program (the packs share one shape, so there is exactly one compile
-    per policy): unlike the scan's fixed grid, event-round lane lengths
-    differ per trace, and one big batch would run every lane to the
-    slowest lane's round count while blowing the cache footprint —
-    splitting the trace axis is measurably faster than vmapping it.
-    With ``devices`` set, each invocation shards its (point) lanes
-    across the devices.
-    """
-    assert all(p.system in _SCANNABLE for p in points)
-    _reject_preempt(points, "rounds")
+def _pack_rounds(points: List[SweepPoint],
+                 workloads: Sequence[Tuple[Sequence[Job],
+                                           Sequence[Tuple[float, int]]]],
+                 duration: float, options: ScanOptions):
+    """Host-side setup stage of the rounds path: event packing + fold
+    tables + grid construction (see :func:`_pack_scan`)."""
     fb_idx = [i for i, p in enumerate(points) if p.system == "fb"]
     flb_idx = [i for i, p in enumerate(points) if p.system == "flb_nub"]
     max_jobs = max(len(jobs) for jobs, _ in workloads)
@@ -529,6 +528,31 @@ def _sweep_rounds(points: List[SweepPoint],
             [float(points[i].lb_ws) for i in flb_idx],
             dtype=options.dtype, split=True)
         flb = _flb_grid(points, flb_idx, flb_packs[0].submit.dtype)
+    return fb_idx, flb_idx, fb, flb, fb_packs, flb_packs, fb_spec, flb_spec
+
+
+def _sweep_rounds(points: List[SweepPoint],
+                  workloads: Sequence[Tuple[Sequence[Job],
+                                            Sequence[Tuple[float, int]]]],
+                  duration: float,
+                  options: ScanOptions) -> List[List[Dict]]:
+    """FB and FLB-NUB points through the event-round fast path
+    (``repro.sim.rounds``): adaptive jump-to-next-event steps with
+    exact completions, batched over sweep points like the scan.
+
+    Workload traces run as *separate* invocations of the same compiled
+    program (the packs share one shape, so there is exactly one compile
+    per policy): unlike the scan's fixed grid, event-round lane lengths
+    differ per trace, and one big batch would run every lane to the
+    slowest lane's round count while blowing the cache footprint —
+    splitting the trace axis is measurably faster than vmapping it.
+    With ``devices`` set, each invocation shards its (point) lanes
+    across the devices.
+    """
+    assert all(p.system in _SCANNABLE for p in points)
+    _reject_preempt(points, "rounds")
+    (fb_idx, flb_idx, fb, flb, fb_packs, flb_packs,
+     fb_spec, flb_spec) = _pack_rounds(points, workloads, duration, options)
 
     outs = [roundslib.rounds_grids(
         fb, flb,
@@ -541,6 +565,70 @@ def _sweep_rounds(points: List[SweepPoint],
                   for k in outs[0][kind]}
            for kind in outs[0]}
     rows = _assemble_rows(points, fb_idx, flb_idx, out, len(workloads),
+                          "rounds")
+    _warn_diagnostics(rows, "rounds")
+    return rows
+
+
+def _pack_scenarios_grids(points: List[SweepPoint], grid,
+                          synth, options: ScanOptions):
+    """Setup stage of the generated-scenario path: one
+    :func:`repro.sim.scenarios.pack_scenarios` per policy (job tables,
+    rise compression and the batched (W, P) fold tables are all array
+    ops — no per-lane host loop)."""
+    from repro.sim import scenarios as scenarioslib
+    fb_idx = [i for i, p in enumerate(points) if p.system == "fb"]
+    flb_idx = [i for i, p in enumerate(points) if p.system == "flb_nub"]
+    duration = float(grid.duration)
+    changes = synth.ws_values[:, 1:] != synth.ws_values[:, :-1]
+    n_ws = int(changes.sum(axis=1).max()) + 1
+
+    fb = flb = fb_packed = flb_packed = fb_spec = flb_spec = None
+    if fb_idx:
+        leases = [points[i].lease_seconds for i in fb_idx]
+        fb_spec = options.resolve_rounds("fb", leases, duration,
+                                         grid.max_jobs, n_ws)
+        fb_packed = scenarioslib.pack_scenarios(
+            synth, fb_spec.window, "fb", leases,
+            [float(points[i].capacity) for i in fb_idx],
+            dtype=options.dtype)
+        fb = _fb_grid(points, fb_idx, fb_packed.submit.dtype)
+    if flb_idx:
+        leases = [points[i].lease_seconds for i in flb_idx]
+        flb_spec = options.resolve_rounds("flb_nub", leases, duration,
+                                          grid.max_jobs, n_ws)
+        flb_packed = scenarioslib.pack_scenarios(
+            synth, flb_spec.window, "flb_nub", leases,
+            [float(points[i].lb_ws) for i in flb_idx],
+            dtype=options.dtype)
+        flb = _flb_grid(points, flb_idx, flb_packed.submit.dtype)
+    return (fb_idx, flb_idx, fb, flb, fb_packed, flb_packed, fb_spec,
+            flb_spec)
+
+
+def _sweep_rounds_generated(points: List[SweepPoint], grid,
+                            options: ScanOptions,
+                            synth=None) -> List[List[Dict]]:
+    """FB / FLB-NUB points over a generated scenario batch
+    (:class:`repro.sim.scenarios.ScenarioGrid`) through the event-round
+    engine. Unlike :func:`_sweep_rounds`'s per-trace invocations (2-3
+    hand-built traces with wildly different event densities), generated
+    lanes share one dense WS grid and one job-table height, so the
+    whole (W × P) batch runs as ONE program — nested vmap on a single
+    device, ``sharded_grid_map`` across ``options.devices``.
+    """
+    from repro.sim import scenarios as scenarioslib
+    assert all(p.system in _SCANNABLE for p in points)
+    _reject_preempt(points, "rounds")
+    if synth is None:
+        synth = scenarioslib.synthesize(grid)
+    (fb_idx, flb_idx, fb, flb, fb_packed, flb_packed, fb_spec,
+     flb_spec) = _pack_scenarios_grids(points, grid, synth, options)
+    out = roundslib.rounds_grids(fb, flb, fb_packed, flb_packed,
+                                 fb_spec=fb_spec, flb_spec=flb_spec,
+                                 devices=options.devices)
+    out = jax.tree_util.tree_map(np.asarray, out)
+    rows = _assemble_rows(points, fb_idx, flb_idx, out, grid.n_lanes,
                           "rounds")
     _warn_diagnostics(rows, "rounds")
     return rows
@@ -620,10 +708,40 @@ def run_sweep_workloads(points: Sequence[SweepPoint],
     (§6.1) — the default is the latest horizon any workload implies.
     ``devices`` overrides ``scan_options.devices`` (see
     :class:`ScanOptions`).
+
+    ``workloads`` may instead be a
+    :class:`repro.sim.scenarios.ScenarioGrid` — a generated scenario
+    batch (per-lane PRNG seeds + parameter grids). The lanes then
+    synthesize on device, pack as ONE batch and run the event-round
+    engine as a single (W × P) program (sharded across
+    ``devices`` when set); only FB / FLB-NUB points are supported and
+    the grid fixes the horizon (``duration`` must stay ``None``).
     """
     mode = _resolve_mode(mode, vectorize)
     if devices is not None:
         scan_options = dataclasses.replace(scan_options, devices=devices)
+    from repro.sim import scenarios as scenarioslib
+    if isinstance(workloads, scenarioslib.ScenarioGrid):
+        # Generated scenario batches (keys + param grids, not
+        # List[Job]) flow the event-round engine only: the lanes share
+        # one dense WS grid and job-table height, so the whole (W × P)
+        # batch is one program. The grid carries its own horizon.
+        if mode not in ("auto", "rounds"):
+            raise ValueError(
+                f"generated scenario batches run the rounds engine only "
+                f"(mode 'auto'/'rounds', got {mode!r})")
+        if duration is not None and duration != workloads.duration:
+            raise ValueError(
+                "duration is fixed by ScenarioGrid.duration — pass None")
+        bad = sorted({p.system for p in points
+                      if p.system not in _SCANNABLE})
+        if bad:
+            raise ValueError(
+                f"generated scenario batches support FB / FLB-NUB points "
+                f"only, got {bad}; evaluate DCS/EC2 baselines on "
+                f"sampled lanes (repro.sim.scenarios.sample_workloads)")
+        return _sweep_rounds_generated(list(points), workloads,
+                                       scan_options)
     if duration is None:
         duration = max(default_duration(jobs, ws) for jobs, ws in workloads)
     rows: List[List[Optional[Dict]]] = [

@@ -148,13 +148,27 @@ def sdsc_blue(seed: int = 0, arch_pool: Tuple[str, ...] = ()) -> List[Job]:
                         arch_pool=arch_pool)
 
 
+def _scale_count(d: int, prc: int, prc0: int) -> int:
+    """``max(1, round(d · prc / prc0))`` in exact integer arithmetic
+    (round half up). Exactness makes scaling involutive for upscales:
+    with ``f = prc/prc0 > 1``, ``|d' − d·f| ≤ 1/2`` implies
+    ``|d'/f − d| < 1/2`` strictly, so scaling to ``prc`` and back to
+    ``prc0`` reproduces ``d`` under ANY nearest rounding — and distinct
+    demands stay distinct (``(d2 − d1)·f > 1``), so ``scale_ws``'s
+    duplicate-merge drops nothing on the way up. The float
+    ``int(round(d * (prc/prc0)))`` this replaces drifts on the way back
+    when ``d·prc/prc0`` lands within an ulp of a half-integer."""
+    return max(1, (2 * d * prc + prc0) // (2 * prc0))
+
+
 def scale_jobs(jobs: List[Job], prc: int, prc0: int) -> List[Job]:
     """§6.3 'synthetic heterogeneous workloads': scale a PBJ trace so its
     peak resource demand is ``prc`` instead of ``prc0`` (constant factor on
-    job sizes)."""
-    f = prc / prc0
+    job sizes). Upscale round trips exactly: ``scale_jobs(scale_jobs(jobs,
+    prc, prc0), prc0, prc)`` reproduces the original sizes for
+    ``prc >= prc0`` (see :func:`_scale_count`)."""
     return [Job(jid=j.jid, submit=j.submit,
-                size=max(1, int(round(j.size * f))), runtime=j.runtime,
+                size=_scale_count(j.size, prc, prc0), runtime=j.runtime,
                 arch=j.arch)
             for j in jobs]
 
@@ -200,11 +214,31 @@ def worldcup98(seed: int = 0, peak_vms: int = 64,
 
 def scale_ws(trace: List[Tuple[float, int]], prc: int,
              prc0: int = 64) -> List[Tuple[float, int]]:
-    """Scale a WS demand trace to peak ``prc`` (constant factor, §6.3)."""
-    f = prc / prc0
+    """Scale a WS demand trace to peak ``prc`` (constant factor, §6.3).
+    Upscale round trips exactly: ``scale_ws(scale_ws(tr, prc, prc0),
+    prc0, prc)`` reproduces the original series for ``prc >= prc0``
+    (distinct demands stay distinct, so no change points merge — see
+    :func:`_scale_count`)."""
     out: List[Tuple[float, int]] = []
     for t, d in trace:
-        nd = max(1, int(round(d * f)))
+        nd = _scale_count(d, prc, prc0)
         if not out or nd != out[-1][1]:
             out.append((t, nd))
     return out
+
+
+# On-device generator family (JAX) — lazily forwarded so this module
+# stays importable with numpy alone (repro.sim promises traces-without-
+# jax); the generators live in repro.sim.scenarios.
+_SCENARIO_NAMES = ("PBJParams", "WSParams", "ScenarioGrid",
+                   "SynthesizedBatch", "NASA_IPSC_PBJ", "SDSC_BLUE_PBJ",
+                   "WORLDCUP_WS", "synth_pbj", "synth_ws", "lane_keys",
+                   "synthesize", "pack_scenarios", "sample_workloads")
+
+
+def __getattr__(name: str):
+    if name in _SCENARIO_NAMES:
+        from repro.sim import scenarios
+        return getattr(scenarios, name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

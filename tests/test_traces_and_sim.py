@@ -60,6 +60,25 @@ def test_scaling(ipsc):
     assert max(j.size for j in half) == 64
 
 
+@pytest.mark.parametrize("prc", [96, 128, 144, 200, 640])
+def test_scale_ws_upscale_round_trips_exactly(prc):
+    """scale_ws(scale_ws(tr, prc), 64, prc0=prc) == tr for prc >= 64 —
+    the exact-rational rounding in _scale_count guarantees it (the old
+    float ``int(round(d * prc / prc0))`` drifted when the product landed
+    within an ulp of a half-integer and rounded the wrong way)."""
+    tr = traces.worldcup98(seed=5)
+    up = traces.scale_ws(tr, prc, prc0=64)
+    assert max(d for _, d in up) == traces._scale_count(64, prc, 64)
+    assert traces.scale_ws(up, 64, prc0=prc) == tr
+
+
+@pytest.mark.parametrize("prc", [144, 192, 256, 333, 640])
+def test_scale_jobs_upscale_round_trips_exactly(prc, ipsc):
+    up = traces.scale_jobs(ipsc, prc=prc, prc0=128)
+    back = traces.scale_jobs(up, prc=128, prc0=prc)
+    assert [j.size for j in back] == [j.size for j in ipsc]
+
+
 # --------------------------------------------------- paper claims (scaled)
 
 def test_fb_claim_40pct_smaller_cluster(ipsc, ws128):
