@@ -897,6 +897,116 @@ def run_roundstep_bench(argv) -> int:
     return 0 if all(r["bit_equal"] for r in out["widths"]) else 1
 
 
+def live_benchmark(tiny: bool = False, serve_dt: float = 30.0) -> dict:
+    """Live-vs-sim differential: replay WS traces as request traffic
+    through the serving stack (``repro.serving.replay`` — autoscaler +
+    VirtualReplica on the shared event pump) and diff the resulting
+    decision ledger against the event simulator on the same workload,
+    under ``CONTRACTS['live']``. Lanes: one paper-trace pair (NASA iPSC
+    jobs + World Cup demand) and one synthesized ``synth_ws`` scenario
+    lane. Returns the BENCH_live.json payload."""
+    from repro.core.jobs import Job
+    from repro.core.pbj_manager import PBJPolicyParams
+    from repro.serving.replay import replay
+    from repro.sim import scenarios as sc
+    from repro.sim import traces
+    from repro.sim.contracts import CONTRACTS, demand_drift
+    from repro.sim.engine import build_fb, clone_jobs, run_sim
+    from repro.sim.pump import DecisionLedger
+
+    day = 24 * 3600.0
+    horizon = day if tiny else 2 * day
+    peak = 8 if tiny else 16
+    capacity = 16 if tiny else 32
+    ckpt = PBJPolicyParams(checkpoint_preempt=True)
+    contract = CONTRACTS["live"]
+
+    nasa = [Job(jid=i, submit=j.submit, size=min(j.size, capacity // 2),
+                runtime=j.runtime)
+            for i, j in enumerate(j for j in traces.nasa_ipsc(seed=0)
+                                  if j.submit < horizon * 0.6)]
+    nasa = nasa[:40 if tiny else 120]
+    wc = traces.worldcup98(seed=0, peak_vms=peak, duration=horizon)
+    grid = sc.ScenarioGrid(
+        seeds=(5,),
+        pbj=sc.PBJParams(nodes=float(capacity), utilization=0.45,
+                         n_jobs=30.0 if tiny else 90.0),
+        ws=sc.WSParams(peak=float(peak), base_mean=3.0),
+        duration=horizon, max_jobs=200, ws_step=900.0)
+    (sjobs, sws), = sc.sample_workloads(sc.synthesize(grid), [0])
+
+    out = {"tiny": tiny, "horizon_s": horizon, "capacity": capacity,
+           "serve_dt_s": serve_dt,
+           "contract": {"node_hours_rel": contract.node_hours_rel,
+                        "peak_rel": contract.peak_rel,
+                        "completed_exact": contract.completed_exact,
+                        "demand_mae_rel": contract.demand_mae_rel,
+                        "demand_peak_rel": contract.demand_peak_rel},
+           "lanes": []}
+    for name, jobs, ws in (("nasa+worldcup", nasa, wc),
+                           ("synth_ws", sjobs, sws)):
+        led = DecisionLedger()
+        wall_ref, ref = _timed(lambda: run_sim(
+            build_fb(capacity, params=ckpt), clone_jobs(jobs), ws,
+            duration=horizon, name="event", ledger=led), reps=1)
+        wall_live, res = _timed(lambda: replay(
+            clone_jobs(jobs), ws, capacity, duration=horizon,
+            serve_dt=serve_dt), reps=1)
+        violations = contract.check_live(
+            res.row.row(), ref.row(), res.derived_demand,
+            res.trace_demand, horizon)
+        mae, dpeak = demand_drift(res.derived_demand, res.trace_demand,
+                                  horizon)
+        out["lanes"].append({
+            "lane": name, "jobs": len(jobs), "ws_steps": len(ws),
+            "event_wall_s": round(wall_ref, 3),
+            "live_wall_s": round(wall_live, 3),
+            "event": ref.row(), "live": res.row.row(),
+            "requests_completed": res.requests_completed,
+            "peak_instances": res.peak_instances,
+            "ledger_events": len(res.ledger.entries),
+            "demand_mae_rel": round(mae, 4),
+            "demand_peak_rel": round(dpeak, 4),
+            "contract_ok": not violations,
+            "contract_violations": violations,
+        })
+    return out
+
+
+def run_live_bench(argv) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.run live")
+    ap.add_argument("--tiny", action="store_true",
+                    help="one-day horizon, peak-8 traces (CI smoke)")
+    ap.add_argument("--serve-dt", type=float, default=30.0, metavar="S",
+                    help="serving tick of the replay layer (seconds)")
+    ap.add_argument("--check-contract", action="store_true",
+                    help="exit 1 unless every lane is inside "
+                    "CONTRACTS['live']")
+    ap.add_argument("--out", default="results/BENCH_live.json")
+    args = ap.parse_args(argv)
+    out = live_benchmark(tiny=args.tiny, serve_dt=args.serve_dt)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    rc = 0
+    for lane in out["lanes"]:
+        ev, lv = lane["event"], lane["live"]
+        print(f"lane={lane['lane']} jobs={lane['jobs']} "
+              f"completed={lv['completed_jobs']}/{ev['completed_jobs']} "
+              f"node_hours={lv['node_hours']:.1f}/{ev['node_hours']:.1f} "
+              f"demand_mae={lane['demand_mae_rel']} "
+              f"requests={lane['requests_completed']} "
+              f"walls: live={lane['live_wall_s']}s "
+              f"event={lane['event_wall_s']}s "
+              f"contract_ok={lane['contract_ok']}")
+        if args.check_contract and not lane["contract_ok"]:
+            print(f"LIVE GATE FAILED at lane {lane['lane']}: "
+                  f"{lane['contract_violations']}", file=sys.stderr)
+            rc = 1
+    print(f"# -> {args.out}")
+    return rc
+
+
 def main() -> None:
     # Deferred so `sweep --devices N` can set XLA_FLAGS first.
     from benchmarks.tables import ALL_TABLES
@@ -932,4 +1042,6 @@ if __name__ == "__main__":
         sys.exit(run_roundstep_bench(sys.argv[2:]))
     if len(sys.argv) > 1 and sys.argv[1] == "scenarios":
         sys.exit(run_scenarios_bench(sys.argv[2:]))
+    if len(sys.argv) > 1 and sys.argv[1] == "live":
+        sys.exit(run_live_bench(sys.argv[2:]))
     main()

@@ -37,3 +37,10 @@ while 1 in cloud._live:
 print(f"job 1 completed at step {p.step}/20 — "
       f"preemption cost zero lost steps (kill-restart would have lost "
       f"{6} steps).")
+
+# Every decision above went through the same event pump + ledger the
+# simulator uses — a live run is diffable against a simulated one.
+print("\ndecision ledger (t, kind, arg, started/killed, pbj+ws nodes):")
+for e in cloud.ledger.entries:
+    print(f"  t={e.t:6.0f} {e.kind:7s} arg={e.arg:4.0f} "
+          f"+{e.started}/-{e.killed} pbj={e.pbj_nodes} ws={e.ws_nodes}")

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.jobs import Job, JobQueue, RunningSet
 
@@ -63,6 +63,12 @@ class PBJManager:
         self._next_epoch = 0
         self.completed: List[Job] = []
         self.kill_count = 0
+        # Called at the single kill site as hook(t, job), after progress
+        # bookkeeping and before the job re-enters the queue. The live
+        # bridge registers the checkpoint-preempt of its real payloads
+        # here — first-class for EVERY kill path (WS spikes, replayed
+        # demand, force_release), not just an interactive helper.
+        self.preempt_hooks: List[Callable[[float, Job], None]] = []
 
     # ------------------------------------------------------------- state
 
@@ -150,6 +156,8 @@ class PBJManager:
         self.kill_count += 1
         if self.params.checkpoint_preempt:
             job.progress = min(job.runtime, job.progress + (t - job.start))
+        for hook in self.preempt_hooks:
+            hook(t, job)
         job.start = -1.0
         self.queue.push(job)   # re-enters at its arrival-order position
 

@@ -50,6 +50,7 @@ class WSManager:
         self.name = name
         self.policy = policy
         self.instances = policy.initial_instances
+        self.draining = 0        # instances marked for removal, not yet gone
         self.demand = 0          # nodes currently demanded (replay mode)
         self._util_samples: List[Tuple[float, float]] = []
 
@@ -64,17 +65,45 @@ class WSManager:
     # ----------------------------------------------- live-adjustment mode
 
     def observe_utilization(self, t: float, utilization: float) -> Optional[int]:
-        """Feed a utilization sample; returns new instance count on change."""
+        """Feed a utilization sample; returns the new *serving* target
+        when the policy fires (None otherwise).
+
+        Growth commits immediately (``instances`` rises — or a draining
+        instance is resurrected). Shrink is DEFERRED: an instance still
+        holds requests when the policy fires, so it is only *marked*
+        draining here; ``instances`` — and therefore ``nodes_needed`` —
+        drops when the caller confirms the drain completed
+        (:meth:`confirm_shrink`). This is what keeps the manager's count
+        and the autoscaler's replica list in lockstep: the count changes
+        exactly when a replica actually appears or disappears.
+        """
         self._util_samples.append((t, utilization))
         avg, self._util_samples = windowed_mean(
             self._util_samples, t, self.policy.window_seconds)
-        delta = self.policy.decide(self.instances, avg)
-        if delta != 0:
-            self.instances += delta
-            self._util_samples.clear()   # restart the window after a change
-            return self.instances
+        serving = self.instances - self.draining
+        delta = self.policy.decide(serving, avg)
+        if delta > 0:
+            if self.draining:
+                self.draining -= 1      # resurrect a draining instance
+            else:
+                self.instances += delta
+            self._util_samples.clear()  # restart the window after a change
+            return self.instances - self.draining
+        if delta < 0:
+            self.draining += 1          # marked; confirmed when drained
+            self._util_samples.clear()
+            return self.instances - self.draining
         return None
+
+    def confirm_shrink(self, n: int = 1) -> None:
+        """A marked instance finished draining and is gone: the count —
+        and the node lease behind it — drops now, not before."""
+        assert 0 <= n <= self.draining, (n, self.draining)
+        self.draining -= n
+        self.instances -= n
 
     @property
     def nodes_needed(self) -> int:
+        """Nodes the WS TRE holds: draining instances still serve their
+        outstanding requests, so they keep their lease until confirmed."""
         return self.instances * self.policy.nodes_per_instance

@@ -315,31 +315,53 @@ def prefill_attn(p: Dict, x: jax.Array, cfg: ArchConfig, ax: AxisSizes,
 def decode_attn(p: Dict, x: jax.Array, cfg: ArchConfig, ax: AxisSizes,
                 cache: Dict, pos: jax.Array, local: bool,
                 impl: str = "xla") -> Tuple[jax.Array, Dict]:
-    """One-token decode against the (b, kv, t, hd) cache. x: (b, 1, d)."""
+    """One-token decode against the (b, kv, t, hd) cache. x: (b, 1, d).
+
+    ``pos`` is either a scalar — one write position shared by every
+    batch row — or per-row ``(b,)`` for continuous batching, where the
+    rows sit at heterogeneous sequence positions (the serving engine's
+    slots). Per-row positions rotate, write and mask each row at its own
+    position; they take the masked XLA path (``flash_decode``'s fused
+    kernel contracts on a scalar position).
+    """
     b = x.shape[0]
-    q, k_new, v_new = _project_qkv(p, x, x, cfg, ax, pos[None], pos[None],
-                                   use_rope=True)
+    pos = jnp.asarray(pos)
     cache = dict(cache)
-    k_new = k_new.transpose(0, 2, 1, 3).astype(cache["k"].dtype)  # (b,kv,1,hd)
-    v_new = v_new.transpose(0, 2, 1, 3).astype(cache["v"].dtype)
     max_len = cache["k"].shape[2]
-    at = jnp.minimum(pos, max_len - 1)
-    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k_new,
-                                              (0, 0, at, 0))
-    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v_new,
-                                              (0, 0, at, 0))
     window = cfg.sliding_window if local else None
-    if impl == "pallas":
-        from repro.kernels import ops as kops
-        out = kops.flash_decode(q, cache["k"], cache["v"], at,
-                                window=window, softcap=cfg.attn_softcap)
-    else:
-        cols = jnp.arange(max_len)
-        valid = cols <= at
+    at = jnp.minimum(pos, max_len - 1)
+    if pos.ndim == 0:
+        q, k_new, v_new = _project_qkv(p, x, x, cfg, ax, pos[None],
+                                       pos[None], use_rope=True)
+        k_new = k_new.transpose(0, 2, 1, 3).astype(cache["k"].dtype)
+        v_new = v_new.transpose(0, 2, 1, 3).astype(cache["v"].dtype)
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k_new,
+                                                  (0, 0, at, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v_new,
+                                                  (0, 0, at, 0))
+        if impl == "pallas":
+            from repro.kernels import ops as kops
+            out = kops.flash_decode(q, cache["k"], cache["v"], at,
+                                    window=window, softcap=cfg.attn_softcap)
+            return _out_proj(out, p, ax), cache
+        valid = jnp.arange(max_len) <= at
         if window is not None:
-            valid &= cols > at - window
+            valid &= jnp.arange(max_len) > at - window
         mask = valid[None, None, None, None, :]      # (b,kv,g,1,t)
-        out = _sdpa_cached(q, cache["k"], cache["v"], cfg, mask)
+    else:
+        q, k_new, v_new = _project_qkv(p, x, x, cfg, ax, pos[:, None],
+                                       pos[:, None], use_rope=True)
+        k_new = k_new.transpose(0, 2, 1, 3).astype(cache["k"].dtype)
+        v_new = v_new.transpose(0, 2, 1, 3).astype(cache["v"].dtype)
+        rows = jnp.arange(b)
+        cache["k"] = cache["k"].at[rows, :, at, :].set(k_new[:, :, 0, :])
+        cache["v"] = cache["v"].at[rows, :, at, :].set(v_new[:, :, 0, :])
+        cols = jnp.arange(max_len)[None, :]
+        valid = cols <= at[:, None]
+        if window is not None:
+            valid &= cols > at[:, None] - window
+        mask = valid[:, None, None, None, :]         # (b,kv,g,1,t)
+    out = _sdpa_cached(q, cache["k"], cache["v"], cfg, mask)
     return _out_proj(out, p, ax), cache
 
 

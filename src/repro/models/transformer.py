@@ -383,7 +383,8 @@ class Model:
         return logits, cache
 
     def decode(self, params, tokens, cache, pos):
-        """tokens: (b, 1); pos: scalar int32 (write position)."""
+        """tokens: (b, 1); pos: scalar int32 (one shared write position)
+        or (b,) int32 (per-row positions — continuous batching)."""
         x = self._embed(params, tokens)
         x, cache = self._run_blocks(params, x, "decode", cache=cache,
                                     pos=pos)

@@ -2,9 +2,17 @@
 
 A ``Replica`` is the WS TRE's unit of scaling (== the paper's "Web
 service instance"): it owns a fixed pool of decode slots; requests are
-prefilled into free slots and all active slots step together. Slot
-occupancy is the utilization signal the paper's §6.4 instance-adjustment
-policy consumes (the 80 % rule), via ``Replica.utilization``.
+prefilled into free slots and all active slots step together — each at
+its OWN cache position (per-slot ``pos``, the continuous-batching
+invariant). Slot occupancy is the utilization signal the paper's §6.4
+instance-adjustment policy consumes (the 80 % rule), via
+``Replica.utilization``.
+
+``VirtualReplica`` is the replay tier: the identical slot lifecycle and
+utilization signal with a fixed tokens-per-request latency model instead
+of a Model forward pass — days of replayed World Cup traffic run in
+seconds of wall clock, while the real-``Replica`` path stays as the
+smoke tier (``repro.serving.replay``).
 
 ``LeastLoadedRouter`` is the LVS least-connection analogue: requests go
 to the replica with the fewest outstanding slots.
@@ -34,7 +42,30 @@ class Request:
     output: Optional[List[int]] = None
 
 
-class Replica:
+class SlotPool:
+    """The slot-occupancy surface shared by the real and virtual tiers:
+    whatever serves requests, the router and the §6.4 policy only ever
+    see ``n_active`` / ``utilization`` / ``free_slot``."""
+
+    slots: int
+    active: Dict[int, Request]
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    @property
+    def utilization(self) -> float:
+        return self.n_active / self.slots
+
+    def free_slot(self) -> Optional[int]:
+        for s in range(self.slots):
+            if s not in self.active:
+                return s
+        return None
+
+
+class Replica(SlotPool):
     def __init__(self, cfg: ArchConfig, mesh, slots: int = 8,
                  max_len: int = 256, compute_dtype=jnp.float32,
                  params=None, seed: int = 0):
@@ -51,22 +82,6 @@ class Replica:
         self.last_token = np.zeros(slots, np.int32)
         self._decode = jax.jit(self.model.decode)
         self._prefill = jax.jit(self.model.prefill)
-
-    # ------------------------------------------------------------- slots
-
-    @property
-    def n_active(self) -> int:
-        return len(self.active)
-
-    @property
-    def utilization(self) -> float:
-        return self.n_active / self.slots
-
-    def free_slot(self) -> Optional[int]:
-        for s in range(self.slots):
-            if s not in self.active:
-                return s
-        return None
 
     # ----------------------------------------------------------- serving
 
@@ -103,7 +118,11 @@ class Replica:
         if not self.active:
             return []
         toks = jnp.asarray(self.last_token[:, None])
-        pos = jnp.int32(int(self.pos.max()))   # uniform write position
+        # Per-slot write positions: with heterogeneous prompt lengths
+        # every slot rotates, writes and masks at its own cache position
+        # (inactive rows scatter at stale positions — harmless, admit
+        # re-splices the whole row cache).
+        pos = jnp.asarray(self.pos, jnp.int32)
         logits, self.cache = self._decode(self.params, toks, self.cache, pos)
         nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
         finished = []
@@ -119,10 +138,42 @@ class Replica:
         return finished
 
 
+class VirtualReplica(SlotPool):
+    """The replay-tier replica: Replica's slot lifecycle — admit into a
+    free slot, one token per step, finish after ``max_new_tokens`` —
+    with no Model and no forward pass. A request therefore holds its
+    slot for exactly ``max_new_tokens`` serve ticks: the latency model
+    the replay layer's arrival calibration is built on."""
+
+    def __init__(self, slots: int = 8):
+        self.slots = slots
+        self.active: Dict[int, Request] = {}
+        self.remaining = np.zeros(slots, np.int32)
+
+    def admit(self, req: Request) -> bool:
+        slot = self.free_slot()
+        if slot is None:
+            return False
+        self.active[slot] = req
+        self.remaining[slot] = req.max_new_tokens
+        req.output = []
+        return True
+
+    def step(self) -> List[Request]:
+        finished = []
+        for slot, req in list(self.active.items()):
+            self.remaining[slot] -= 1
+            req.output.append(0)         # a stand-in token per tick
+            if self.remaining[slot] <= 0:
+                finished.append(req)
+                del self.active[slot]
+        return finished
+
+
 class LeastLoadedRouter:
     """LVS least-connection scheduling (§6.4) over replicas."""
 
-    def route(self, replicas: List[Replica]) -> Optional[Replica]:
+    def route(self, replicas: List[SlotPool]) -> Optional[SlotPool]:
         candidates = [r for r in replicas if r.free_slot() is not None]
         if not candidates:
             return None

@@ -12,7 +12,12 @@ own tolerance band:
   residue is first-fit pass convergence and §5.1 kill tie-breaking,
   not discretization);
 * the **vectorized** DCS/EC2 baselines are closed-form — exact to
-  round-off (integer metrics equal, node-hours to ~1e-9 relative).
+  round-off (integer metrics equal, node-hours to ~1e-9 relative);
+* the **live** serving stack replayed over a trace
+  (``repro.serving.replay``) shares the event pump with the reference,
+  so completions are exact; its extra degrees of freedom — the §6.4
+  autoscaler deriving demand from traffic instead of reading the trace
+  — are bounded by :func:`demand_drift` (``LiveContract``).
 
 Both the test suite (tests/test_engine_differential.py) and the CI
 benchmark gate (``benchmarks/run.py sweep --check-fidelity``) import
@@ -24,8 +29,9 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["EngineContract", "SCAN_CONTRACT", "ROUNDS_CONTRACT",
-           "VECTORIZED_CONTRACT", "CONTRACTS", "check_fidelity"]
+__all__ = ["EngineContract", "LiveContract", "SCAN_CONTRACT",
+           "ROUNDS_CONTRACT", "VECTORIZED_CONTRACT", "LIVE_CONTRACT",
+           "CONTRACTS", "check_fidelity", "demand_drift"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +74,67 @@ class EngineContract:
         return violations
 
 
+def demand_drift(live: list, ref: list, duration: float) -> tuple:
+    """Time-weighted drift between two step series ``[(t, value), ...]``
+    (each value holds from its breakpoint to the next). Returns
+    ``(mae_rel, peak_rel)``: the integral of ``|live - ref|`` over the
+    union of breakpoints, normalized by the reference's own integral,
+    and the relative error of the peaks. This is the §6.4 question
+    stated as a number: how closely does utilization-driven instance
+    adjustment re-derive the demand trace it is serving?"""
+
+    def value_at(series, t):
+        v = 0
+        for bt, bv in series:
+            if bt <= t:
+                v = bv
+            else:
+                break
+        return v
+
+    live = sorted(live)
+    ref = sorted(ref)
+    points = sorted({0.0, duration}
+                    | {t for t, _ in live if t < duration}
+                    | {t for t, _ in ref if t < duration})
+    abs_area = 0.0
+    ref_area = 0.0
+    for t0, t1 in zip(points, points[1:]):
+        dt = t1 - t0
+        abs_area += abs(value_at(live, t0) - value_at(ref, t0)) * dt
+        ref_area += value_at(ref, t0) * dt
+    mae_rel = abs_area / max(1e-9, ref_area)
+    peak_live = max((v for _, v in live), default=0)
+    peak_ref = max((v for _, v in ref), default=0)
+    peak_rel = abs(peak_live - peak_ref) / max(1, peak_ref)
+    return mae_rel, peak_rel
+
+
+@dataclasses.dataclass(frozen=True)
+class LiveContract(EngineContract):
+    """The live-stack contract: the row tolerances of EngineContract
+    plus bounds on the autoscaler-derived demand curve vs the replayed
+    trace. ``demand_mae_rel`` absorbs the adjustment lag (one sampling
+    window per demand step) and the ±1 flap when utilization sits at
+    the calibrated ~0.78 equilibrium just under the 80 % threshold;
+    ``demand_peak_rel`` bounds transient overshoot at surge ramps."""
+
+    demand_mae_rel: float = 0.25
+    demand_peak_rel: float = 0.25
+
+    def check_live(self, live: dict, event: dict, live_demand: list,
+                   ref_demand: list, duration: float) -> list:
+        violations = self.check_row(live, event)
+        mae, peak = demand_drift(live_demand, ref_demand, duration)
+        if mae > self.demand_mae_rel:
+            violations.append(
+                f"demand MAE drift {mae:.4f} > {self.demand_mae_rel}")
+        if peak > self.demand_peak_rel:
+            violations.append(
+                f"demand peak drift {peak:.4f} > {self.demand_peak_rel}")
+        return violations
+
+
 SCAN_CONTRACT = EngineContract(completed_rel=0.02, node_hours_rel=0.15,
                                peak_rel=0.15)
 ROUNDS_CONTRACT = EngineContract(completed_rel=0.0, node_hours_rel=0.05,
@@ -75,12 +142,22 @@ ROUNDS_CONTRACT = EngineContract(completed_rel=0.0, node_hours_rel=0.05,
 VECTORIZED_CONTRACT = EngineContract(completed_rel=0.0,
                                      node_hours_rel=1e-9, peak_rel=0.0,
                                      completed_exact=True)
+# Live replay vs the event simulator on one trace: both run the same
+# heap/clock/ProvisioningSystem (the pump), so job completions must
+# match exactly; node-hours/peak drift only through the autoscaler's
+# demand lag (measured ≤2 % node-hours and 2.5–17 % demand MAE across
+# the BENCH_live lanes — the band leaves headroom for trace-shaped
+# transients).
+LIVE_CONTRACT = LiveContract(completed_rel=0.0, node_hours_rel=0.10,
+                             peak_rel=0.10, completed_exact=True,
+                             demand_mae_rel=0.25, demand_peak_rel=0.25)
 
 # Keyed by the ``engine`` tag run_sweep puts on each row.
 CONTRACTS = {
     "scan": SCAN_CONTRACT,
     "rounds": ROUNDS_CONTRACT,
     "vectorized": VECTORIZED_CONTRACT,
+    "live": LIVE_CONTRACT,
 }
 
 

@@ -27,8 +27,6 @@ cross-validated against.
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 from typing import List, Optional, Sequence, Tuple
 
 from repro.core.baselines import DCSSystem, EC2RightScaleSystem
@@ -37,9 +35,13 @@ from repro.core.pbj_manager import PBJManager, PBJPolicyParams, Started
 from repro.core.provision import FBProvisionService, FLBNUBProvisionService
 from repro.core.system import ProvisioningSystem
 from repro.core.ws_manager import WSManager
+from repro.sim.pump import DecisionLedger, EventPump
 
-# Event kinds (ordering key breaks simultaneity deterministically:
-# ws-demand changes apply before lease ticks, ticks before submits).
+# Relative event order for simultaneous times (ws-demand changes apply
+# before lease ticks, ticks before submits). The authoritative ordering
+# now lives in repro.sim.pump (which adds a CALL kind for the live
+# bridge); these legacy codes are the fold-table encoding the sweep
+# engine packs into its device tables, kept for that packed format.
 _WS, _TICK, _SUBMIT, _FINISH = 0, 1, 2, 3
 
 # The paper's comparison matrix (§6.3, §6.5, §6.6) — the single source of
@@ -113,52 +115,35 @@ def default_duration(jobs: Sequence[Job],
 def run_sim(system: ProvisioningSystem, jobs: Sequence[Job],
             ws_trace: Sequence[Tuple[float, int]],
             duration: Optional[float] = None, name: str = "",
-            lease_seconds: Optional[float] = None) -> SimResult:
+            lease_seconds: Optional[float] = None,
+            ledger: Optional[DecisionLedger] = None) -> SimResult:
+    """Drive ``system`` through the trace on the shared event pump.
+
+    ``ledger``, when given, receives one :class:`~repro.sim.pump
+    .LedgerEntry` per provisioning event — the structured decision
+    record the live-vs-sim differential harness diffs against the live
+    bridge's ledger (``CONTRACTS["live"]``).
+    """
     lease = lease_seconds if lease_seconds is not None else system.lease_seconds
-    if lease <= 0:
-        raise ValueError(f"lease_seconds must be > 0, got {lease}")
     if duration is None:
         duration = default_duration(jobs, ws_trace)
-    seq = itertools.count()
-    heap: List[Tuple[float, int, int, object]] = []
+    pump = EventPump(system, duration, ledger=ledger)
+    # Push order (jobs, ws, ticks, then startup) fixes the sequence
+    # numbers that break within-kind ties — identical to the old
+    # monolithic loop, so rows reproduce bit for bit.
+    pump.add_jobs(jobs)
+    ws_initial = pump.add_ws_trace(ws_trace)
+    pump.add_lease_ticks(lease)
+    pump.startup(ws_initial=ws_initial)
+    pump.run()
+    return summarize(system, jobs, duration, name)
 
-    def push(t: float, kind: int, payload: object) -> None:
-        if t <= duration + 1e-9:
-            heapq.heappush(heap, (t, kind, next(seq), payload))
 
-    for job in jobs:
-        push(job.submit, _SUBMIT, job)
-    ws_initial = 0
-    for t, d in ws_trace:
-        if t <= 0:
-            ws_initial = d
-        else:
-            push(t, _WS, d)
-    k = 1
-    while k * lease <= duration:
-        push(k * lease, _TICK, None)
-        k += 1
-
-    def push_starts(starts: List[Started]) -> None:
-        for s in starts:
-            push(s.end_time, _FINISH, (s.job.jid, s.epoch))
-
-    push_starts(system.startup(0.0, ws_initial=ws_initial))
-
-    while heap:
-        t, kind, _, payload = heapq.heappop(heap)
-        if t > duration + 1e-9:
-            break
-        if kind == _SUBMIT:
-            push_starts(system.submit(t, payload))
-        elif kind == _FINISH:
-            jid, epoch = payload
-            push_starts(system.on_finish(t, jid, epoch))
-        elif kind == _WS:
-            push_starts(system.on_ws_demand(t, payload))
-        elif kind == _TICK:
-            push_starts(system.on_lease_tick(t))
-
+def summarize(system: ProvisioningSystem, jobs: Sequence[Job],
+              duration: float, name: str = "") -> SimResult:
+    """Finalize the site ledger and measure the §6.1 metrics — shared by
+    ``run_sim`` and the live replay harness (``repro.serving.replay``),
+    so both paths' rows are built by the same accounting."""
     system.cluster.finalize(duration)
     done = [j for j in jobs if j.completed]
     return SimResult(

@@ -1,30 +1,243 @@
 """Serving engine, autoscaler (§6.4 policy live), and the runtime bridge
-(live PhoenixCloud with checkpoint-preempt) — end-to-end behaviour."""
+(live PhoenixCloud with checkpoint-preempt).
+
+Two speed tiers share this file:
+
+* fast tier-1 tests exercise the live stack's logic with
+  ``VirtualReplica`` payloads and stub training jobs — window semantics
+  of the utilization policy, the deferred-shrink drain protocol, router
+  edge cases, lease accounting of a virtual-tier ``LiveCloud``, and the
+  checkpoint-on-preempt hook;
+* ``slow``-marked tests run real ``Replica``/``TrainJob`` payloads
+  (model forward passes, jit compiles) end-to-end — excluded from the
+  CI smoke job via ``-m "not slow"``.
+"""
+
+import dataclasses
 
 import numpy as np
 import pytest
 
-from repro.configs.base import get_config, reduced_config
-from repro.core.runtime_bridge import LiveCloud
-from repro.launch.mesh import make_local_mesh
-from repro.serving.autoscaler import AutoscaledService
-from repro.serving.engine import LeastLoadedRouter, Replica, Request
+from repro.core.jobs import Job
+from repro.core.runtime_bridge import LiveCloud, LiveJob
+from repro.core.ws_manager import InstanceAdjustmentPolicy, WSManager
+from repro.serving.engine import (LeastLoadedRouter, Request,
+                                  VirtualReplica)
+
+pytestmark = pytest.mark.tier1
 
 
 @pytest.fixture(scope="module")
 def mesh():
+    from repro.launch.mesh import make_local_mesh
     return make_local_mesh()
 
 
-def _req(rid, cfg, n=6, plen=8):
+def _cfg():
+    from repro.configs.base import get_config, reduced_config
+    return reduced_config(get_config("smollm_135m"))
+
+
+def _req(rid, cfg=None, n=6, plen=8):
     rng = np.random.default_rng(rid)
+    vocab = cfg.vocab if cfg is not None else 64
     return Request(rid=rid,
-                   prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+                   prompt=rng.integers(0, vocab, plen).astype(np.int32),
                    max_new_tokens=n)
 
 
+# ------------------------------------------------- WSManager (fast tier)
+
+def test_ws_manager_window_semantics():
+    """Samples feed a (t - window, t] average: stale samples age out,
+    growth fires above 80 %, shrink below 80 %·(n−1)/n — deferred."""
+    policy = InstanceAdjustmentPolicy(initial_instances=2,
+                                      window_seconds=20.0)
+    mgr = WSManager(policy=policy)
+    # avg(0.95) > 0.8 → grow fires on the first sample.
+    assert mgr.observe_utilization(0.0, 0.95) == 3
+    assert mgr.instances == 3
+    # Window restarts after a change; a pair averaging under the grow
+    # threshold but over the shrink one holds steady.
+    assert mgr.observe_utilization(5.0, 0.70) is None
+    assert mgr.observe_utilization(10.0, 0.75) is None
+    assert mgr.instances == 3
+    # 25s later the old samples aged out of the 20s window: the single
+    # fresh sample 0.1 < 0.8·(2/3) fires a shrink.
+    assert mgr.observe_utilization(35.0, 0.10) == 2
+    assert mgr.draining == 1
+    assert mgr.instances == 3            # deferred until drain confirms
+
+
+def test_ws_manager_deferred_shrink_and_resurrect():
+    policy = InstanceAdjustmentPolicy(initial_instances=3,
+                                      window_seconds=10.0)
+    mgr = WSManager(policy=policy)
+    assert mgr.observe_utilization(0.0, 0.0) == 2       # mark one
+    assert (mgr.instances, mgr.draining) == (3, 1)
+    assert mgr.nodes_needed == 3          # drainer still holds its lease
+    # Growth while draining resurrects the marked instance — no new one.
+    assert mgr.observe_utilization(1.0, 0.99) == 3
+    assert (mgr.instances, mgr.draining) == (3, 0)
+    # Shrink again, then the drain completes: both counts drop together.
+    assert mgr.observe_utilization(2.0, 0.0) == 2
+    mgr.confirm_shrink()
+    assert (mgr.instances, mgr.draining) == (2, 0)
+    assert mgr.nodes_needed == 2
+
+
+def test_ws_manager_respects_min_instances():
+    policy = InstanceAdjustmentPolicy(initial_instances=1,
+                                      min_instances=1,
+                                      window_seconds=10.0)
+    mgr = WSManager(policy=policy)
+    for k in range(5):
+        assert mgr.observe_utilization(float(k), 0.0) is None
+    assert (mgr.instances, mgr.draining) == (1, 0)
+
+
+# ------------------------------------------ router + virtual replicas
+
+def test_router_edge_cases():
+    router = LeastLoadedRouter()
+    assert router.route([]) is None
+    full = VirtualReplica(slots=1)
+    assert full.admit(_req(0, n=3))
+    assert router.route([full]) is None          # all slots taken
+    empty = VirtualReplica(slots=1)
+    assert router.route([full, empty]) is empty  # least-loaded wins
+
+
+def test_virtual_replica_slot_lifecycle():
+    rep = VirtualReplica(slots=2)
+    a, b = _req(0, n=2), _req(1, n=4)
+    assert rep.admit(a) and rep.admit(b)
+    assert rep.free_slot() is None and rep.utilization == 1.0
+    assert rep.step() == []                      # nothing done yet
+    assert rep.step() == [a]                     # a held 2 ticks exactly
+    assert rep.n_active == 1
+    assert rep.step() == []
+    assert rep.step() == [b]                     # b held 4 ticks exactly
+    assert rep.n_active == 0
+    assert len(a.output) == 2 and len(b.output) == 4
+
+
+def test_autoscaler_shrink_stays_in_sync():
+    """Regression for the shrink desync: the manager's instance count
+    used to drop when no replica was idle, leaving ``instances`` <
+    ``len(replicas)`` forever. Under the drain protocol the two agree
+    after EVERY tick, and the shrink still completes once the drainer
+    empties."""
+    from repro.serving.autoscaler import AutoscaledService
+
+    policy = InstanceAdjustmentPolicy(initial_instances=2,
+                                      min_instances=1,
+                                      window_seconds=10.0)
+    svc = AutoscaledService(policy=policy, slots_per_replica=4,
+                            replica_factory=lambda: VirtualReplica(4))
+    # One long request per replica: utilization 2/8 is under the shrink
+    # threshold 0.8·(1/2), so the policy fires while BOTH replicas still
+    # hold work — the marked one must drain, not vanish with its
+    # request.
+    svc.submit(_req(0, n=12), now=0.0)
+    svc.submit(_req(1, n=12), now=0.0)
+    history = []
+    for k in range(1, 40):
+        svc.tick(now=float(k) * 5.0)
+        history.append((svc.manager.instances, len(svc.replicas),
+                        svc.manager.draining, len(svc.draining)))
+        assert svc.manager.instances == len(svc.replicas)
+        assert svc.manager.draining == len(svc.draining)
+    assert len(svc.replicas) == policy.min_instances  # shrink completed
+    assert len(svc.completed) == 2                    # nothing dropped
+    assert any(d > 0 for _, _, d, _ in history)       # drain really ran
+
+
+def test_autoscaler_grows_under_virtual_load():
+    from repro.serving.autoscaler import AutoscaledService
+
+    policy = InstanceAdjustmentPolicy(initial_instances=1,
+                                      window_seconds=10.0)
+    svc = AutoscaledService(policy=policy, slots_per_replica=2,
+                            replica_factory=lambda: VirtualReplica(2))
+    rid = 0
+    for k in range(1, 15):
+        for _ in range(3):
+            svc.submit(_req(rid, n=4), now=float(k) * 5.0)
+            rid += 1
+        svc.tick(now=float(k) * 5.0)
+    assert len(svc.replicas) > 1, "80% policy never scaled up"
+    assert svc.manager.instances == len(svc.replicas)
+
+
+# ------------------------------------- LiveCloud, virtual tier (fast)
+
+def test_live_cloud_virtual_lease_accounting():
+    """The bridge on the pump, no JAX anywhere: virtual jobs complete
+    from their Started.end_time, WS demand moves leases, and every
+    decision lands in the ledger with conserved node counts."""
+    cloud = LiveCloud(capacity=8, lease_seconds=60.0, ws_initial=2)
+    assert cloud.service.cluster.allocated("WS") == 2
+    assert cloud.service.cluster.allocated("PBJ") == 6   # rest granted
+    cloud.submit_job(Job(jid=1, submit=0.0, size=4, runtime=120.0))
+    assert 1 in cloud.pbj.running
+    cloud.set_ws_demand(6)            # 8-6=2 < 4 → job preempted
+    assert 1 not in cloud.pbj.running
+    assert cloud.service.cluster.allocated("WS") == 6
+    cloud.set_ws_demand(1)
+    cloud.lease_tick()                # idle chips flow back to PBJ
+    assert 1 in cloud.pbj.running
+    cloud.run_until(cloud.t + 600.0)  # virtual FINISH auto-scheduled
+    assert 1 not in cloud.pbj.running
+    job = next(e for e in cloud.ledger.entries if e.kind == "finish")
+    assert job.arg == 1.0
+    for e in cloud.ledger.entries:
+        assert e.pbj_nodes + e.ws_nodes == e.total_nodes <= 8
+
+
+class _StubPayload:
+    """Stands in for TrainJob in hook tests: counts checkpoints."""
+
+    def __init__(self, step=7):
+        self.step = step
+        self.checkpoints = 0
+
+    def checkpoint(self, block=False):
+        self.checkpoints += 1
+
+
+def test_preempt_hook_checkpoints_live_victims():
+    """Satellite regression: a live job killed by a WS spike must get a
+    checkpoint call at the manager's kill site, and its queue entry's
+    progress must be pinned to the payload's step count (bridge time
+    unit), not the wall-clock formula."""
+    cloud = LiveCloud(capacity=8, lease_seconds=60.0)
+    job = Job(jid=9, submit=0.0, size=6, runtime=30.0)
+    stub = _StubPayload(step=7)
+    cloud._live[9] = LiveJob(job, stub)
+    cloud.submit_job(job)
+    assert 9 in cloud.pbj.running
+    victims = cloud.preempt_for_ws(5)      # 8-5=3 < 6 → must preempt
+    assert victims == [9]
+    assert stub.checkpoints == 1
+    assert job.progress == 7.0
+    assert 9 in [j.jid for j in cloud.pbj.queue]
+
+
+def test_preempt_hook_ignores_virtual_jobs():
+    cloud = LiveCloud(capacity=8, lease_seconds=60.0)
+    cloud.submit_job(Job(jid=2, submit=0.0, size=6, runtime=3600.0))
+    assert cloud.preempt_for_ws(5) == [2]  # no payload — no crash
+    progress = next(j for j in cloud.pbj.queue if j.jid == 2).progress
+    assert progress >= 0.0                 # wall-clock formula applied
+
+
+# --------------------------------------------- real payloads (slow)
+
+@pytest.mark.slow
 def test_replica_decodes_requests(mesh):
-    cfg = reduced_config(get_config("smollm_135m"))
+    from repro.serving.engine import Replica
+    cfg = _cfg()
     rep = Replica(cfg, mesh, slots=2, max_len=32)
     assert rep.admit(_req(0, cfg))
     assert rep.admit(_req(1, cfg))
@@ -40,8 +253,32 @@ def test_replica_decodes_requests(mesh):
         assert all(0 <= t < cfg.vocab for t in r.output)
 
 
+@pytest.mark.slow
+def test_replica_per_slot_positions(mesh):
+    """Satellite regression: two slots with UNEQUAL prompt lengths must
+    each write at their own cache position. The old uniform
+    ``pos.max()`` write put the short slot's token at the long slot's
+    position, leaving a hole in its cache row."""
+    cfg = _cfg()
+    from repro.serving.engine import Replica
+    rep = Replica(cfg, mesh, slots=2, max_len=32)
+    assert rep.admit(_req(0, cfg, n=4, plen=3))
+    assert rep.admit(_req(1, cfg, n=4, plen=8))
+    assert list(rep.pos) == [3, 8]
+    rep.step()
+    assert list(rep.pos) == [4, 9]
+    k = np.asarray(rep.cache["l0"]["k"])   # (periods, slots, kv, L, hd)
+    # Slot 0's decode token landed at ITS position 3...
+    assert np.abs(k[:, 0, :, 3, :]).max() > 0
+    # ...and nowhere past it (the uniform-pos bug wrote at 8).
+    assert np.abs(k[:, 0, :, 4:, :]).max() == 0
+    assert np.abs(k[:, 1, :, 8, :]).max() > 0
+
+
+@pytest.mark.slow
 def test_greedy_decode_is_deterministic(mesh):
-    cfg = reduced_config(get_config("smollm_135m"))
+    from repro.serving.engine import Replica
+    cfg = _cfg()
     outs = []
     for _ in range(2):
         rep = Replica(cfg, mesh, slots=1, max_len=32, seed=7)
@@ -53,16 +290,20 @@ def test_greedy_decode_is_deterministic(mesh):
     assert outs[0] == outs[1]
 
 
+@pytest.mark.slow
 def test_router_least_loaded(mesh):
-    cfg = reduced_config(get_config("smollm_135m"))
+    from repro.serving.engine import Replica
+    cfg = _cfg()
     r1 = Replica(cfg, mesh, slots=2, max_len=32)
     r2 = Replica(cfg, mesh, slots=2, max_len=32, params=r1.params)
     r1.admit(_req(0, cfg))
     assert LeastLoadedRouter().route([r1, r2]) is r2
 
 
+@pytest.mark.slow
 def test_autoscaler_scales_up_under_load(mesh):
-    cfg = reduced_config(get_config("smollm_135m"))
+    from repro.serving.autoscaler import AutoscaledService
+    cfg = _cfg()
     svc = AutoscaledService(cfg, mesh, slots_per_replica=2, max_len=32)
     start = len(svc.replicas)
     for i in range(12):
@@ -81,6 +322,7 @@ def test_autoscaler_scales_up_under_load(mesh):
     assert len(svc.replicas) <= start + 1
 
 
+@pytest.mark.slow
 def test_live_cloud_preempt_and_resume(mesh, tmp_path):
     """End-to-end PhoenixCloud-on-JAX: FB policy, WS spike preempts the
     training job via checkpoint, job resumes and completes after the
@@ -96,6 +338,9 @@ def test_live_cloud_preempt_and_resume(mesh, tmp_path):
     cloud.preempt_for_ws(5)
     assert 1 not in cloud.pbj.running
     assert cloud.service.cluster.allocated("WS") == 5
+    # The preempt hook really checkpointed: state is on disk.
+    ckpt_files = list((tmp_path / "job1").rglob("*"))
+    assert ckpt_files, "preempt did not write a checkpoint"
     step_at_preempt = payload.step
     # Spike recedes; next lease tick re-provisions idle chips to PBJ.
     cloud.set_ws_demand(1)
