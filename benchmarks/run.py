@@ -41,6 +41,14 @@ to the rounds contract, and a fold-table cache gate. Writes
 ``results/BENCH_scenarios.json``; ``--check-contract`` makes contract or
 cache failures exit non-zero (the wide-lane CI leg).
 
+``python -m benchmarks.run faults`` is the chaos differential:
+throughput-vs-MTBF curves under deterministic fault schedules
+(``repro.sim.faults``), each schedule replayed through the event
+engine, the rounds engine (time-varying capacity) and a ``LiveCloud``
+trace replay. ``--check-contract`` gates on ``CONTRACTS['faults']``,
+the no-lost-jobs invariant, and event-vs-live ledger identity; writes
+``results/BENCH_faults.json``.
+
 ``python -m benchmarks.run roundstep`` is the kernel microbenchmark:
 one fused vs one unfused outer step across vmapped lane widths
 (``--lanes``), bit-equality asserted at every width, written to
@@ -1007,6 +1015,192 @@ def run_live_bench(argv) -> int:
     return rc
 
 
+def faults_benchmark(tiny: bool = False, serve_dt: float = 30.0) -> dict:
+    """Chaos differential: throughput-vs-MTBF curves under deterministic
+    fault schedules (``repro.sim.faults``), each schedule replayed
+    through the repo's three execution paths and cross-checked:
+
+      * event engine (plain kill mode) vs the rounds engine's
+        time-varying-capacity fold (``fb_rounds_row``), under
+        ``CONTRACTS['faults']`` (node-hours/peak 2 %, completions
+        ±2-jobs-or-2 %);
+      * event engine (checkpoint-preempt mode) vs a ``LiveCloud`` trace
+        replay with ``inject_faults`` — both run the shared pump, so
+        the decision ledgers must match entry for entry and completed
+        jobs exactly;
+      * the no-lost-jobs invariant on every event run — a failure may
+        delay a job, never drop it.
+
+    One serving-layer lane (autoscaler + ``GrantBackoff`` +
+    admission-throttle shedding) runs at the shortest MTBF and reports
+    its shed/retry counters (observability, not gated: the
+    autoscaler-derived demand legitimately shifts kill victims)."""
+    from repro.core.jobs import Job
+    from repro.core.pbj_manager import PBJPolicyParams
+    from repro.core.runtime_bridge import LiveCloud
+    from repro.serving.replay import replay
+    from repro.sim import traces
+    from repro.sim.contracts import CONTRACTS, no_lost_jobs
+    from repro.sim.engine import build_fb, clone_jobs, run_sim
+    from repro.sim.faults import (burst_schedule, exponential_schedule,
+                                  merge_schedules)
+    from repro.sim.pump import DecisionLedger
+    from repro.sim.rounds import fb_rounds_row
+
+    day = 24 * 3600.0
+    horizon = day if tiny else 2 * day
+    capacity = 16 if tiny else 32
+    lease = 3600.0
+    mttr = 1800.0
+    mtbf_hours = (4.0, 24.0) if tiny else (2.0, 6.0, 24.0, 96.0)
+    ckpt = PBJPolicyParams(checkpoint_preempt=True)
+    contract = CONTRACTS["faults"]
+
+    jobs = [Job(jid=i, submit=j.submit, size=min(j.size, capacity // 2),
+                runtime=j.runtime)
+            for i, j in enumerate(j for j in traces.nasa_ipsc(seed=0)
+                                  if j.submit < horizon * 0.6)]
+    jobs = jobs[:40 if tiny else 120]
+    ws = traces.worldcup98(seed=0, peak_vms=8 if tiny else 16,
+                           duration=horizon)
+    d0 = max((int(d) for t, d in ws if t <= 0), default=0)
+
+    base_sys = build_fb(capacity, lease)
+    base = run_sim(base_sys, clone_jobs(jobs), ws, duration=horizon,
+                   name="event")
+    out = {"tiny": tiny, "horizon_s": horizon, "capacity": capacity,
+           "mttr_s": mttr, "jobs": len(jobs),
+           "contract": {"completed_abs": contract.completed_abs,
+                        "completed_rel": contract.completed_rel,
+                        "node_hours_rel": contract.node_hours_rel,
+                        "peak_rel": contract.peak_rel},
+           "baseline_no_faults": base.row(), "lanes": []}
+
+    for mh in mtbf_hours:
+        sched = merge_schedules(
+            exponential_schedule(seed=7, n_nodes=capacity // 2,
+                                 mtbf=mh * 3600.0, mttr=mttr,
+                                 duration=horizon),
+            burst_schedule(seed=11, k=max(1, capacity // 4),
+                           mtbf=4 * mh * 3600.0, mttr=2 * mttr,
+                           duration=horizon))
+        # Event reference (plain §5.1 kill mode) + kill/shed ledger.
+        ev_sys = build_fb(capacity, lease)
+        ev_jobs = clone_jobs(jobs)
+        led = DecisionLedger()
+        wall_ev, ev = _timed(lambda: run_sim(
+            ev_sys, ev_jobs, ws, duration=horizon, name="event",
+            ledger=led, faults=sched), reps=1)
+        lost = no_lost_jobs(ev_jobs, ev_sys)
+        # Rounds engine: fault instants folded into the horizon min,
+        # capacity time-varying.
+        wall_rr, rr = _timed(lambda: fb_rounds_row(
+            jobs, ws, capacity, lease, horizon, faults=sched), reps=1)
+        violations = contract.check_row(rr, ev.row())
+        # Checkpoint-restart recovery: event(ckpt) vs LiveCloud trace
+        # replay of the same schedule — one pump, exact ledgers.
+        ck_led = DecisionLedger()
+        ck_sys = build_fb(capacity, lease, params=ckpt)
+        ck_jobs = clone_jobs(jobs)
+        ck = run_sim(ck_sys, ck_jobs, ws, duration=horizon,
+                     name="event_ckpt", ledger=ck_led, faults=sched)
+        cloud = LiveCloud(capacity, lease_seconds=lease,
+                          duration=horizon, ws_initial=d0)
+        cloud.load_trace(clone_jobs(jobs), ws_trace=ws, lease_ticks=True)
+        cloud.inject_faults(sched)
+        cloud.run_until(horizon)
+        from repro.sim.engine import summarize
+        live = summarize(cloud.service, [], horizon, "live")
+        live_exact = (cloud.ledger.entries == ck_led.entries
+                      and live.node_hours == ck.node_hours)
+        counts = led.counts()
+        out["lanes"].append({
+            "mtbf_h": mh, "schedule_events": len(sched),
+            "max_concurrent_failed": sched.max_concurrent(),
+            "event": ev.row(), "rounds": rr,
+            "event_ckpt": ck.row(),
+            "event_wall_s": round(wall_ev, 3),
+            "rounds_wall_s": round(wall_rr, 3),
+            "policy_kills": counts["kills"] - counts["failure_kills"],
+            "failure_kills": counts["failure_kills"],
+            "sheds": counts["sheds"],
+            "throughput_vs_baseline": round(
+                ev.completed_jobs / max(1, base.completed_jobs), 4),
+            "no_lost_jobs": not lost, "lost": lost,
+            "live_ledger_exact": live_exact,
+            "contract_ok": not violations,
+            "contract_violations": violations,
+        })
+
+    # Serving-layer chaos lane: autoscaler-driven replay with admission
+    # shedding and bounded grant-retry backoff (observability only).
+    sched = merge_schedules(
+        exponential_schedule(seed=7, n_nodes=capacity // 2,
+                             mtbf=mtbf_hours[0] * 3600.0, mttr=mttr,
+                             duration=horizon),
+        burst_schedule(seed=11, k=max(1, capacity // 4),
+                       mtbf=4 * mtbf_hours[0] * 3600.0, mttr=2 * mttr,
+                       duration=horizon))
+    res = replay(clone_jobs(jobs), ws, capacity, duration=horizon,
+                 serve_dt=serve_dt, faults=sched, max_queue=64)
+    out["serving"] = {
+        "mtbf_h": mtbf_hours[0],
+        "live": res.row.row(),
+        "requests_completed": res.requests_completed,
+        "shed_requests": res.shed_requests,
+        "grant_retries": res.grant_retries,
+        "failure_kills": res.ledger.kills("fail"),
+        "sheds": res.ledger.sheds(),
+    }
+    return out
+
+
+def run_faults_bench(argv) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.run faults")
+    ap.add_argument("--tiny", action="store_true",
+                    help="one-day horizon, capacity 16, 2 MTBF points "
+                    "(CI smoke)")
+    ap.add_argument("--serve-dt", type=float, default=30.0, metavar="S",
+                    help="serving tick of the chaos serving lane")
+    ap.add_argument("--check-contract", action="store_true",
+                    help="exit 1 on any CONTRACTS['faults'] violation, "
+                    "lost job, or live-vs-event ledger mismatch")
+    ap.add_argument("--out", default="results/BENCH_faults.json")
+    args = ap.parse_args(argv)
+    out = faults_benchmark(tiny=args.tiny, serve_dt=args.serve_dt)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    rc = 0
+    base = out["baseline_no_faults"]["completed_jobs"]
+    print(f"baseline (no faults): completed={base}")
+    for lane in out["lanes"]:
+        ev, rr = lane["event"], lane["rounds"]
+        print(f"mtbf={lane['mtbf_h']}h events={lane['schedule_events']} "
+              f"completed ev/rounds={ev['completed_jobs']}/"
+              f"{rr['completed_jobs']} "
+              f"throughput_vs_base={lane['throughput_vs_baseline']} "
+              f"kills={lane['policy_kills']}+{lane['failure_kills']}f "
+              f"sheds={lane['sheds']} "
+              f"live_exact={lane['live_ledger_exact']} "
+              f"no_lost={lane['no_lost_jobs']} "
+              f"contract_ok={lane['contract_ok']}")
+        if args.check_contract and not (
+                lane["contract_ok"] and lane["no_lost_jobs"]
+                and lane["live_ledger_exact"]):
+            print(f"FAULTS GATE FAILED at mtbf={lane['mtbf_h']}h: "
+                  f"{lane['contract_violations'] or lane['lost'] or 'live ledger mismatch'}",
+                  file=sys.stderr)
+            rc = 1
+    sv = out["serving"]
+    print(f"serving lane: requests={sv['requests_completed']} "
+          f"shed_requests={sv['shed_requests']} "
+          f"grant_retries={sv['grant_retries']} "
+          f"failure_kills={sv['failure_kills']}")
+    print(f"# -> {args.out}")
+    return rc
+
+
 def main() -> None:
     # Deferred so `sweep --devices N` can set XLA_FLAGS first.
     from benchmarks.tables import ALL_TABLES
@@ -1044,4 +1238,6 @@ if __name__ == "__main__":
         sys.exit(run_scenarios_bench(sys.argv[2:]))
     if len(sys.argv) > 1 and sys.argv[1] == "live":
         sys.exit(run_live_bench(sys.argv[2:]))
+    if len(sys.argv) > 1 and sys.argv[1] == "faults":
+        sys.exit(run_faults_bench(sys.argv[2:]))
     main()

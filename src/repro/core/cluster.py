@@ -40,6 +40,7 @@ class Cluster:
         if capacity is not None and capacity < 0:
             raise ValueError("capacity must be >= 0")
         self.capacity = capacity
+        self._failed = 0
         self._res: Dict[str, _RESlot] = {}
         # Accounting state (piecewise-constant integration).
         self._t_last = t0
@@ -63,10 +64,25 @@ class Cluster:
         return sum(s.allocated for s in self._res.values())
 
     @property
+    def failed(self) -> int:
+        """Nodes currently down (fault injection, ``repro.sim.faults``)."""
+        return self._failed
+
+    @property
+    def effective_capacity(self) -> Optional[int]:
+        """Surviving capacity: ``capacity - failed`` (None if unbounded)."""
+        if self.capacity is None:
+            return None
+        return self.capacity - self._failed
+
+    @property
     def idle(self) -> int:
         if self.capacity is None:
             raise LedgerError("idle undefined for unbounded capacity")
-        return self.capacity - self.total_allocated
+        # Clamped: right after a failure the site may transiently hold
+        # more than the surviving capacity until the provision service's
+        # on_fail handler drains the overflow.
+        return max(0, self.capacity - self._failed - self.total_allocated)
 
     def adjust_events(self, re_name: Optional[str] = None) -> int:
         if re_name is not None:
@@ -79,10 +95,12 @@ class Cluster:
             raise LedgerError("allocate() takes n >= 0; use release()")
         if n == 0:
             return
-        if self.capacity is not None and self.total_allocated + n > self.capacity:
+        if (self.capacity is not None
+                and self.total_allocated + n > self.capacity - self._failed):
             raise LedgerError(
                 f"allocation of {n} to {re_name!r} exceeds capacity "
-                f"{self.capacity} (allocated={self.total_allocated})")
+                f"{self.capacity} - {self._failed} failed "
+                f"(allocated={self.total_allocated})")
         self._advance(t)
         slot = self._res[re_name]
         slot.allocated += n
@@ -117,6 +135,34 @@ class Cluster:
         self._res[dst].allocated += n
         self._res[src].adjust_events += 1
         self._res[dst].adjust_events += 1
+
+    # ------------------------------------------------------- fault injection
+
+    def fail_nodes(self, t: float, n: int) -> int:
+        """Mark ``n`` nodes as failed (clamped to the surviving count).
+        Returns the number actually failed. The ledger itself stays
+        policy-free: draining the overflow (killed jobs, shed WS
+        replicas) is the provision service's job (``on_fail``)."""
+        if self.capacity is None:
+            raise LedgerError("fail_nodes undefined for unbounded capacity")
+        if n < 0:
+            raise LedgerError("fail_nodes() takes n >= 0")
+        n = min(n, self.capacity - self._failed)
+        if n > 0:
+            self._advance(t)
+            self._failed += n
+        return n
+
+    def repair_nodes(self, t: float, n: int) -> int:
+        """Return ``n`` previously-failed nodes to service (clamped to
+        the failed count). Returns the number actually repaired."""
+        if n < 0:
+            raise LedgerError("repair_nodes() takes n >= 0")
+        n = min(n, self._failed)
+        if n > 0:
+            self._advance(t)
+            self._failed -= n
+        return n
 
     # ------------------------------------------------------------ accounting
 

@@ -42,11 +42,16 @@ class FBProvisionService(ProvisioningSystem):
         self.pbj = pbj
         self.ws = ws
         self.lease_seconds = lease_seconds
+        self.shed_count = 0
+        # Raw (unclamped) WS demand, remembered so a REPAIR event can
+        # refill the WS TRE to min(demand, surviving capacity).
+        self._ws_demand_raw = 0
 
     def startup(self, t: float, ws_initial: int = 0) -> List[Started]:
         """Allocate lower bounds at TRE startup (§5.1 rule 2: the
         coordinated pool is the sum of the lower bounds == C; everything
         not needed by WS goes to PBJ)."""
+        self._ws_demand_raw = ws_initial
         ws_initial = min(ws_initial, self.cluster.capacity)
         if ws_initial:
             self.cluster.allocate(t, self.ws.name, ws_initial)
@@ -58,8 +63,15 @@ class FBProvisionService(ProvisioningSystem):
     # -------------------------------------------------------------- events
 
     def on_ws_demand(self, t: float, demand: int) -> List[Started]:
-        """§5.1 rule 3 — WS demand beats PBJ, killing jobs if necessary."""
-        demand = min(demand, self.cluster.capacity)   # C bounds everything
+        """§5.1 rule 3 — WS demand beats PBJ, killing jobs if necessary.
+        Under degraded capacity (failed nodes) demand beyond the
+        surviving count is shed — counted, not granted — until repairs
+        land (graceful degradation)."""
+        self._ws_demand_raw = demand
+        granted = min(demand, self.cluster.effective_capacity)
+        if demand > granted:
+            self.shed_count += demand - granted
+        demand = granted
         self.ws.set_demand(demand)
         cur = self.cluster.allocated(self.ws.name)
         if demand > cur:
@@ -87,6 +99,52 @@ class FBProvisionService(ProvisioningSystem):
             return self.pbj.grant(t, idle)
         return []
 
+    # --------------------------------------------------------- fault hooks
+
+    def on_fail(self, t: float, k: int) -> List[Started]:
+        """Chaos tier: ``k`` nodes die. Absorption order — idle pool
+        first, then PBJ jobs (killed through the existing §5.1 path:
+        checkpoint hook, requeue, restart from checkpointed progress),
+        then WS replicas (shed — demand exceeds surviving capacity until
+        a repair). WS keeps its §5.1 priority throughout: after the
+        handler, ``ws_alloc == min(demand, C - failed)``, which is
+        exactly the time-varying share line the rounds engine folds into
+        its WS tables."""
+        k = self.cluster.fail_nodes(t, k)
+        if k == 0:
+            return []
+        overflow = (self.cluster.total_allocated
+                    - self.cluster.effective_capacity)
+        restarts: List[Started] = []
+        if overflow > 0:
+            give = min(overflow, self.cluster.allocated(self.pbj.name))
+            if give:
+                released, restarts = self.pbj.force_release(t, give)
+                assert released == give, (released, give)
+                self.cluster.release(t, self.pbj.name, give)
+                overflow -= give
+            if overflow > 0:
+                # The failure reached WS replicas: drain and shed.
+                self.cluster.release(t, self.ws.name, overflow)
+                self.ws.set_demand(self.cluster.allocated(self.ws.name))
+                self.shed_count += overflow
+        return restarts
+
+    def on_repair(self, t: float, k: int) -> List[Started]:
+        """Chaos tier: ``k`` nodes return. The WS shortfall refills
+        immediately (§5.1 priority); remaining recovered nodes sit idle
+        until the next lease tick provisions them to PBJ (rule 4)."""
+        k = self.cluster.repair_nodes(t, k)
+        if k == 0:
+            return []
+        cur = self.cluster.allocated(self.ws.name)
+        target = min(self._ws_demand_raw, self.cluster.effective_capacity)
+        grow = min(target - cur, self.cluster.idle)
+        if grow > 0:
+            self.cluster.allocate(t, self.ws.name, grow)
+            self.ws.set_demand(cur + grow)
+        return []
+
 
 class FLBNUBProvisionService(ProvisioningSystem):
     """Fixed Lower Bound / No Upper Bound model (§5.2)."""
@@ -106,6 +164,7 @@ class FLBNUBProvisionService(ProvisioningSystem):
         # Pool split bookkeeping (who is using the B nodes right now).
         self._pool_pbj = 0     # pool nodes provisioned to PBJ
         self._pool_ws = 0      # pool nodes serving WS demand (<= lb_ws)
+        self._pool_failed = 0  # pool nodes currently down (chaos tier)
 
     @property
     def coordinated_size(self) -> int:
@@ -113,7 +172,8 @@ class FLBNUBProvisionService(ProvisioningSystem):
 
     @property
     def _pool_idle(self) -> int:
-        return self.coordinated_size - self._pool_pbj - self._pool_ws
+        return (self.coordinated_size - self._pool_failed
+                - self._pool_pbj - self._pool_ws)
 
     def startup(self, t: float, ws_initial: int = 0) -> List[Started]:
         """§5.2 rule 2: allocate lower bounds at startup. The whole pool B
@@ -166,3 +226,52 @@ class FLBNUBProvisionService(ProvisioningSystem):
                 self._pool_pbj -= from_pool
                 assert self._pool_pbj >= 0
         return started
+
+    # --------------------------------------------------------- fault hooks
+
+    def on_fail(self, t: float, k: int) -> List[Started]:
+        """Chaos tier: ``k`` pool nodes die (faults target the
+        permanently-held B nodes; elastic leases model the provider's
+        replaceable inventory, §5.2's N >> 2 assumption). Absorption
+        order: pool idle, then pool PBJ nodes (§5.1 kill path — U/V/G
+        re-leases at the next tick), then the WS pool share — which is
+        re-satisfied immediately with an elastic lease, so WS never
+        sheds under FLB-NUB."""
+        k = min(k, self.coordinated_size - self._pool_failed)
+        if k <= 0:
+            return []
+        self._pool_failed += k
+        # Down pool nodes stop accruing node-hours until repaired.
+        self.cluster.release(t, POOL, k)
+        overflow = (self._pool_pbj + self._pool_ws
+                    - (self.coordinated_size - self._pool_failed))
+        restarts: List[Started] = []
+        if overflow > 0:
+            give = min(overflow, self._pool_pbj)
+            if give:
+                released, restarts = self.pbj.force_release(t, give)
+                assert released == give, (released, give)
+                self._pool_pbj -= give
+                overflow -= give
+            if overflow > 0:
+                self._pool_ws -= overflow
+                self.cluster.allocate(t, self.ws.name, overflow)
+        return restarts
+
+    def on_repair(self, t: float, k: int) -> List[Started]:
+        """Chaos tier: ``k`` pool nodes return and are held (paid for)
+        again. The WS share moves back onto recovered pool nodes first
+        (pool-first rule 4), releasing the elastic leases that replaced
+        them; PBJ re-grows at the next tick (idle pool → PBJ, U/V/G)."""
+        k = min(k, self._pool_failed)
+        if k <= 0:
+            return []
+        self._pool_failed -= k
+        self.cluster.allocate(t, POOL, k)
+        pool_share = min(self.ws.demand, self.lb_ws,
+                         self._pool_ws + self._pool_idle)
+        delta = pool_share - self._pool_ws
+        if delta > 0:
+            self._pool_ws = pool_share
+            self.cluster.release(t, self.ws.name, delta)
+        return []

@@ -159,6 +159,17 @@ class LiveCloud:
         if lease_ticks:
             self.pump.add_lease_ticks(self.service.lease_seconds)
 
+    def inject_faults(self, schedule) -> None:
+        """Chaos tier: schedule a :class:`repro.sim.faults.FaultSchedule`
+        on the shared pump. FAIL/REPAIR events dispatch through the FB
+        service's ``on_fail``/``on_repair`` exactly as in the simulator
+        — the same schedule replayed here and in ``run_sim`` produces
+        the same decision ledger, which is what the chaos differential
+        (``benchmarks.run faults``, ``tests/test_faults.py``) diffs.
+        Live payloads killed by a failure checkpoint through the same
+        ``preempt_hooks`` entry as any WS-spike preemption."""
+        self.pump.add_faults(schedule)
+
     def set_ws_demand(self, demand: int) -> None:
         self.pump.push(self.t, WS, demand)
         self.pump.run_until(self.t)

@@ -12,6 +12,8 @@ lifecycle events:
     on_ws_demand(t, demand)     the web-service consumption changes
     on_lease_tick(t)            a lease time-unit boundary (§4: resource
                                 provisioning happens in lease units)
+    on_fail(t, k)               k nodes fail (chaos tier, repro.sim.faults)
+    on_repair(t, k)             k previously-failed nodes return
 
 Every handler returns the jobs it *started* as ``Started`` events — the
 single return channel through which new completion events enter the
@@ -56,6 +58,11 @@ class ProvisioningSystem(abc.ABC):
     ws: WSManager
     lease_seconds: float
 
+    # WS demand units dropped because demand exceeded surviving capacity
+    # (graceful degradation under faults). The pump samples the delta
+    # around every handler into the ledger's ``shed`` column.
+    shed_count: int = 0
+
     # ------------------------------------------------------ policy hooks
 
     @abc.abstractmethod
@@ -69,6 +76,23 @@ class ProvisioningSystem(abc.ABC):
     @abc.abstractmethod
     def on_lease_tick(self, t: float) -> List[Started]:
         """React to a lease time-unit boundary."""
+
+    # ------------------------------------------------------- fault hooks
+
+    def on_fail(self, t: float, k: int) -> List[Started]:
+        """``k`` nodes fail at ``t``. Non-abstract on purpose: faults
+        are only ever injected explicitly (``EventPump.add_faults``), so
+        systems without a failure model (DCS, EC2 baselines) stay valid
+        as long as no schedule targets them."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no failure model; only inject "
+            f"fault schedules into systems implementing on_fail/on_repair")
+
+    def on_repair(self, t: float, k: int) -> List[Started]:
+        """``k`` previously-failed nodes return to service at ``t``."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no failure model; only inject "
+            f"fault schedules into systems implementing on_fail/on_repair")
 
     # ----------------------------------------------- default job routing
 

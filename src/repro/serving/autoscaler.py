@@ -21,12 +21,51 @@ replayed days of trace run in seconds.
 
 from __future__ import annotations
 
+import random
 import time
 from typing import Callable, List, Optional
 
 from repro.core.ws_manager import InstanceAdjustmentPolicy, WSManager
 from repro.serving.engine import (LeastLoadedRouter, Replica, Request,
                                   SlotPool)
+
+
+class GrantBackoff:
+    """Bounded, deterministic jittered exponential backoff for the WS
+    grow path under degraded capacity (the chaos tier).
+
+    When the provision service grants fewer nodes than the autoscaler
+    asked for (nodes failed, demand shed), retrying immediately would
+    hammer a cluster that cannot satisfy the request until a repair
+    lands. Instead the caller asks :meth:`next_delay` how long to wait
+    before re-posting the demand: ``base * 2^attempt`` seconds, jittered
+    by a seeded ``random.Random`` (equal-jitter — uniform in (d/2, d])
+    so replicated services don't retry in lockstep, capped at ``max_delay``
+    and at ``max_retries`` attempts (then ``None`` — give up until the
+    demand itself changes). Seeded, so a replayed trace backs off
+    identically run to run. :meth:`reset` rearms after a full grant."""
+
+    def __init__(self, base: float = 30.0, max_delay: float = 600.0,
+                 max_retries: int = 6, seed: int = 0):
+        if base <= 0 or max_delay < base or max_retries < 1:
+            raise ValueError("need base > 0, max_delay >= base, "
+                             "max_retries >= 1")
+        self.base = base
+        self.max_delay = max_delay
+        self.max_retries = max_retries
+        self._rng = random.Random(seed)
+        self.attempt = 0
+
+    def next_delay(self) -> Optional[float]:
+        """Delay before the next retry, or ``None`` when exhausted."""
+        if self.attempt >= self.max_retries:
+            return None
+        d = min(self.base * (2.0 ** self.attempt), self.max_delay)
+        self.attempt += 1
+        return d * (1.0 - 0.5 * self._rng.random())   # (d/2, d] jitter
+
+    def reset(self) -> None:
+        self.attempt = 0
 
 
 class AutoscaledService:
@@ -36,7 +75,8 @@ class AutoscaledService:
                  params=None,
                  on_scale: Optional[Callable[[int, int], None]] = None,
                  replica_factory: Optional[Callable[[], SlotPool]] = None,
-                 manager: Optional[WSManager] = None):
+                 manager: Optional[WSManager] = None,
+                 max_queue: Optional[int] = None):
         if policy is None:
             policy = InstanceAdjustmentPolicy(
                 nodes_per_instance=cfg.serve_chips_per_replica
@@ -62,6 +102,13 @@ class AutoscaledService:
             self._add_replica()
         self.queue: List[Request] = []
         self.completed: List[Request] = []
+        # Load-shedding mode (chaos tier): with ``max_queue`` set, a
+        # request arriving at a full backlog is refused instead of
+        # queued — graceful degradation while failed nodes keep the
+        # autoscaler's grants short. Shed requests are counted, never
+        # silently dropped.
+        self.max_queue = max_queue
+        self.shed_requests = 0
 
     def _real_replica(self) -> Replica:
         r = Replica(self.cfg, self.mesh, slots=self.slots,
@@ -74,9 +121,15 @@ class AutoscaledService:
         self.replicas.append(self._factory())
         self._mk_replica_count += 1
 
-    def submit(self, req: Request, now: Optional[float] = None):
+    def submit(self, req: Request, now: Optional[float] = None) -> bool:
+        """Admit a request; returns False (and counts the shed) when the
+        backlog is at ``max_queue``."""
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.shed_requests += 1
+            return False
         req.submitted = time.time() if now is None else now
         self.queue.append(req)
+        return True
 
     @property
     def utilization(self) -> float:

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import math
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -42,7 +43,7 @@ import numpy as np
 from repro.core.jobs import Job
 from repro.core.runtime_bridge import LiveCloud
 from repro.core.ws_manager import InstanceAdjustmentPolicy, WSManager
-from repro.serving.autoscaler import AutoscaledService
+from repro.serving.autoscaler import AutoscaledService, GrantBackoff
 from repro.serving.engine import Request, VirtualReplica
 from repro.sim.engine import SimResult, default_duration, summarize
 from repro.sim.pump import CALL, WS, DecisionLedger
@@ -88,6 +89,9 @@ class ReplayResult:
     derived_demand: List[Tuple[float, int]]   # what the autoscaler asked
     requests_completed: int
     peak_instances: int
+    shed_requests: int = 0      # admission-throttled arrivals (chaos tier)
+    grant_retries: int = 0      # backed-off demand re-posts after a
+    #                             short grant (failed capacity)
 
 
 class _ServeDriver:
@@ -97,7 +101,8 @@ class _ServeDriver:
 
     def __init__(self, cloud: LiveCloud, service: AutoscaledService,
                  trace: List[Tuple[float, int]], clock: ArrivalClock,
-                 hold: int, dt: float, duration: float):
+                 hold: int, dt: float, duration: float,
+                 backoff: Optional[GrantBackoff] = None):
         self.cloud = cloud
         self.service = service
         self.times = [t for t, _ in trace]
@@ -109,6 +114,14 @@ class _ServeDriver:
         self._rid = 0
         self._last_need = service.manager.nodes_needed
         self.peak_instances = len(service.replicas)
+        # Chaos tier: when the provision service grants fewer nodes
+        # than asked (failures shed the difference), re-assert the
+        # demand after a bounded jittered-exponential delay instead of
+        # every serve tick. None (the no-fault default) keeps the event
+        # stream byte-identical to the pre-fault replay.
+        self.backoff = backoff
+        self._retry_at = -math.inf
+        self.grant_retries = 0
 
     def demand_at(self, t: float) -> int:
         i = bisect.bisect_right(self.times, t) - 1
@@ -132,6 +145,26 @@ class _ServeDriver:
             # service reacts before another serve tick runs.
             self._last_need = need
             self.cloud.pump.push(t, WS, need)
+            if self.backoff is not None:
+                self.backoff.reset()
+                self._retry_at = -math.inf
+        elif self.backoff is not None and t >= self._retry_at:
+            # Grant shortfall (failed nodes shed part of the demand):
+            # re-post the same demand after a backed-off delay — a
+            # repair in between turns the retry into a real grow.
+            granted = self.cloud.service.cluster.allocated(
+                self.cloud.ws.name)
+            if granted < self._last_need:
+                delay = self.backoff.next_delay()
+                if delay is not None and t + delay <= self.duration:
+                    self._retry_at = t + delay
+                    self.grant_retries += 1
+                    self.cloud.pump.push(t + delay, WS, self._last_need)
+                else:
+                    self._retry_at = math.inf   # exhausted: wait for a
+                    #                             real demand change
+            else:
+                self.backoff.reset()
         if t + self.dt <= self.duration:
             self.cloud.pump.push(t + self.dt, CALL, self)
         return []
@@ -142,10 +175,20 @@ def replay(jobs: Sequence[Job], ws_trace: Sequence[Tuple[float, int]],
            rho: float = 0.78, serve_dt: float = 30.0,
            lease_seconds: float = 3600.0,
            duration: Optional[float] = None,
+           faults=None, max_queue: Optional[int] = None,
+           backoff: Optional[GrantBackoff] = None,
            name: str = "live") -> ReplayResult:
     """Replay ``ws_trace`` as live traffic against a ``LiveCloud`` that
     is simultaneously running ``jobs`` as its PBJ workload. Returns the
-    simulator-shaped result row plus both demand curves for diffing."""
+    simulator-shaped result row plus both demand curves for diffing.
+
+    Chaos tier: ``faults`` injects a
+    :class:`repro.sim.faults.FaultSchedule` on the shared pump;
+    ``max_queue`` turns on load-shedding admission at the serving layer;
+    ``backoff`` bounds grant-shortfall retries (defaults to a seeded
+    :class:`GrantBackoff` whenever faults are injected — without
+    faults the retry machinery stays off so no-fault replays remain
+    byte-identical to the pre-fault stack)."""
     if duration is None:
         duration = default_duration(jobs, ws_trace)
     trace = demand_step_series(ws_trace)
@@ -158,11 +201,18 @@ def replay(jobs: Sequence[Job], ws_trace: Sequence[Tuple[float, int]],
                       duration=duration, ws_initial=d0, ws=manager)
     service = AutoscaledService(
         policy=policy, slots_per_replica=slots, manager=manager,
-        replica_factory=lambda: VirtualReplica(slots))
+        replica_factory=lambda: VirtualReplica(slots),
+        max_queue=max_queue)
     cloud.load_trace(jobs, ws_trace=(), lease_ticks=True)
+    if faults is not None:
+        cloud.inject_faults(faults)
+        if backoff is None:
+            backoff = GrantBackoff(base=2 * serve_dt,
+                                   max_delay=max(600.0, 2 * serve_dt),
+                                   seed=0)
     driver = _ServeDriver(cloud, service, trace,
                           ArrivalClock(rho * slots / hold),
-                          hold, serve_dt, duration)
+                          hold, serve_dt, duration, backoff=backoff)
     driver.start()
     cloud.run_until(duration)
     row = summarize(cloud.service, list(jobs), duration, name)
@@ -170,4 +220,6 @@ def replay(jobs: Sequence[Job], ws_trace: Sequence[Tuple[float, int]],
         row=row, ledger=cloud.ledger, trace_demand=trace,
         derived_demand=cloud.ledger.demand_series(),
         requests_completed=len(service.completed),
-        peak_instances=driver.peak_instances)
+        peak_instances=driver.peak_instances,
+        shed_requests=service.shed_requests,
+        grant_retries=driver.grant_retries)

@@ -116,24 +116,32 @@ def run_sim(system: ProvisioningSystem, jobs: Sequence[Job],
             ws_trace: Sequence[Tuple[float, int]],
             duration: Optional[float] = None, name: str = "",
             lease_seconds: Optional[float] = None,
-            ledger: Optional[DecisionLedger] = None) -> SimResult:
+            ledger: Optional[DecisionLedger] = None,
+            faults=None) -> SimResult:
     """Drive ``system`` through the trace on the shared event pump.
 
     ``ledger``, when given, receives one :class:`~repro.sim.pump
     .LedgerEntry` per provisioning event — the structured decision
     record the live-vs-sim differential harness diffs against the live
     bridge's ledger (``CONTRACTS["live"]``).
+
+    ``faults``, when given, is a :class:`repro.sim.faults.FaultSchedule`
+    injected as FAIL/REPAIR events (the chaos tier); the system must
+    implement ``on_fail``/``on_repair``. ``None`` leaves the event
+    stream byte-identical to the pre-fault engine.
     """
     lease = lease_seconds if lease_seconds is not None else system.lease_seconds
     if duration is None:
         duration = default_duration(jobs, ws_trace)
     pump = EventPump(system, duration, ledger=ledger)
-    # Push order (jobs, ws, ticks, then startup) fixes the sequence
-    # numbers that break within-kind ties — identical to the old
-    # monolithic loop, so rows reproduce bit for bit.
+    # Push order (jobs, ws, ticks, faults, then startup) fixes the
+    # sequence numbers that break within-kind ties — identical to the
+    # old monolithic loop, so rows reproduce bit for bit.
     pump.add_jobs(jobs)
     ws_initial = pump.add_ws_trace(ws_trace)
     pump.add_lease_ticks(lease)
+    if faults is not None:
+        pump.add_faults(faults)
     pump.startup(ws_initial=ws_initial)
     pump.run()
     return summarize(system, jobs, duration, name)

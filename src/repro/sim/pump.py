@@ -18,11 +18,19 @@ change at t already applied, and any WS event a CALL handler *pushes*
 at its own time t dispatches before a tick at t — the live replay's
 autoscaler feedback keeps the WS-before-tick invariant for free):
 
-    WS < CALL < TICK < SUBMIT < FINISH
+    WS < CALL < TICK < SUBMIT < FINISH < REPAIR < FAIL
 
 Ties within one kind break by push order (a monotone sequence number),
 so rebuilding ``run_sim`` on this pump reproduces the old loop's event
 order — and therefore its ``SimResult`` rows — bit for bit.
+
+REPAIR/FAIL are the chaos tier (``repro.sim.faults``): both sort after
+FINISH at the same timestamp, so a job finishing exactly when its node
+dies still completes (the no-lost-jobs invariant of
+``CONTRACTS["faults"]`` — and the same convention the rounds engine
+gets for free by folding completions before capacity stops). REPAIR
+sorts before FAIL so capacity returning at t is visible to a failure
+striking at the same t.
 
 ``DecisionLedger`` is the structured record both paths write through
 the same dispatch site: one entry per provisioning event (startup,
@@ -46,14 +54,16 @@ from typing import Callable, List, Optional, Sequence, Tuple
 from repro.core.pbj_manager import Started
 from repro.core.system import ProvisioningSystem
 
-__all__ = ["WS", "CALL", "TICK", "SUBMIT", "FINISH", "LedgerEntry",
-           "DecisionLedger", "EventPump"]
+__all__ = ["WS", "CALL", "TICK", "SUBMIT", "FINISH", "REPAIR", "FAIL",
+           "LedgerEntry", "DecisionLedger", "EventPump"]
 
 # Simultaneity order (see module docstring). WS/TICK/SUBMIT/FINISH keep
 # their relative order from the old run_sim loop; CALL is the pump's
 # extension point for embedders (the live bridge's training quanta and
-# serving ticks) and never occurs in pure simulation.
-WS, CALL, TICK, SUBMIT, FINISH = 0, 1, 2, 3, 4
+# serving ticks) and never occurs in pure simulation. REPAIR/FAIL are
+# the fault-injection tier and sort last: finishes beat failures at the
+# same instant, repairs beat failures at the same instant.
+WS, CALL, TICK, SUBMIT, FINISH, REPAIR, FAIL = 0, 1, 2, 3, 4, 5, 6
 
 _EPS = 1e-9
 
@@ -64,12 +74,18 @@ class LedgerEntry:
 
     t: float
     kind: str          # "startup" | "ws" | "tick" | "submit" | "finish"
-    arg: float         # ws: demand; submit/finish: jid; startup: ws_initial
+                       # | "fail" | "repair"
+    arg: float         # ws: demand; submit/finish: jid; startup:
+                       # ws_initial; fail/repair: node count
     started: int       # jobs the handler started
-    killed: int        # pbj kill_count delta across the handler
+    killed: int        # pbj kill_count delta across the handler — a
+                       # kill on a "fail" row is a failure kill, on any
+                       # other row a policy kill (§5.1 WS priority)
     pbj_nodes: int     # post-handler allocation of the PBJ TRE
     ws_nodes: int      # post-handler allocation of the WS TRE
     total_nodes: int   # post-handler total allocation of the site
+    shed: int = 0      # WS demand units newly shed by the handler
+                       # (demand exceeded surviving capacity)
 
 
 class DecisionLedger:
@@ -95,8 +111,17 @@ class DecisionLedger:
                 out.append((e.t, int(e.arg)))
         return out
 
-    def kills(self) -> int:
-        return sum(e.killed for e in self.entries)
+    def kills(self, kind: Optional[str] = None) -> int:
+        """Total kills, optionally restricted to one event kind —
+        ``kills("fail")`` counts failure kills, ``kills()`` all kills,
+        and their difference the §5.1 policy kills; live-vs-sim diffs
+        must not conflate the two."""
+        return sum(e.killed for e in self.entries
+                   if kind is None or e.kind == kind)
+
+    def sheds(self) -> int:
+        """Total WS demand units shed (demand > surviving capacity)."""
+        return sum(e.shed for e in self.entries)
 
     def counts(self) -> dict:
         """Events by kind plus total kills/starts — the summary the
@@ -105,6 +130,8 @@ class DecisionLedger:
         for e in self.entries:
             by_kind[e.kind] = by_kind.get(e.kind, 0) + 1
         return {"events": by_kind, "kills": self.kills(),
+                "failure_kills": self.kills("fail"),
+                "sheds": self.sheds(),
                 "starts": sum(e.started for e in self.entries)}
 
 
@@ -173,6 +200,20 @@ class EventPump:
                 self.push(t, WS, d)
         return ws_initial
 
+    def add_faults(self, schedule) -> None:
+        """Schedule a :class:`repro.sim.faults.FaultSchedule` (any object
+        with an ``events()`` iterator of ``(t, delta)`` pairs — +k means
+        k nodes fail at t, -k means k nodes repaired). Events at t <= 0
+        are dropped: the startup allocation always sees full capacity,
+        matching the rounds engine's packing."""
+        for t, delta in schedule.events():
+            if t <= 0:
+                continue
+            if delta > 0:
+                self.push(t, FAIL, delta)
+            else:
+                self.push(t, REPAIR, -delta)
+
     def add_lease_ticks(self, lease_seconds: float) -> None:
         if lease_seconds <= 0:
             raise ValueError(
@@ -192,6 +233,7 @@ class EventPump:
     def _dispatch(self, kind: str, t: float, arg: float,
                   handler: Callable[[], List[Started]]) -> None:
         kills0 = self.system.pbj.kill_count
+        shed0 = getattr(self.system, "shed_count", 0)
         starts = handler()
         self.push_starts(starts)
         if self.ledger is not None:
@@ -201,7 +243,8 @@ class EventPump:
                 killed=self.system.pbj.kill_count - kills0,
                 pbj_nodes=_allocated(cl, self.system.pbj.name),
                 ws_nodes=_allocated(cl, self.system.ws.name),
-                total_nodes=cl.total_allocated))
+                total_nodes=cl.total_allocated,
+                shed=getattr(self.system, "shed_count", 0) - shed0))
 
     def step(self) -> bool:
         """Dispatch the next event. Returns False when the heap is empty
@@ -228,6 +271,12 @@ class EventPump:
         elif kind == TICK:
             self._dispatch("tick", t, -1.0,
                            lambda: sys_.on_lease_tick(t))
+        elif kind == FAIL:
+            self._dispatch("fail", t, float(payload),
+                           lambda: sys_.on_fail(t, payload))
+        elif kind == REPAIR:
+            self._dispatch("repair", t, float(payload),
+                           lambda: sys_.on_repair(t, payload))
         else:                               # CALL — embedder extension
             # Not a provisioning decision: no ledger entry of its own,
             # but anything it starts or pushes flows through the pump

@@ -140,6 +140,7 @@ from repro.sim.scan import (FBGrid, FLBGrid, _prm_tree, _size_classes,
 __all__ = [
     "PackedEventWorkloads", "RoundsSpec", "pack_event_workloads",
     "rounds_grids", "round_budget", "ws_fold_tables_batch",
+    "fb_rounds_row",
     "fold_table_cache_info", "fold_table_cache_clear",
     "FB_ROUNDS_WINDOW", "FLB_ROUNDS_WINDOW", "ROUNDS_FF_PASSES",
     "COMPACT_EVERY", "COALESCE_BATCH", "DEFAULT_BATCH",
@@ -245,13 +246,23 @@ class PackedEventWorkloads:
     #                           policy's WS share (peak folding)
     ws_at_tick: jnp.ndarray   # (W, P, NT) demand at each lease boundary
     n_jobs: jnp.ndarray       # (W,) real (unpadded) job counts
+    # Chaos tier (repro.sim.faults), FB only. None (the default) leaves
+    # the pack structurally identical to the pre-fault format: a None
+    # data field flattens to an empty pytree, so vmap axes, buffer
+    # donation and every existing construction site are untouched.
+    fault_times: Optional[jnp.ndarray] = None   # (W, NF) stop times, +inf
+    fault_failed: Optional[jnp.ndarray] = None  # (W, NF) failed count
+    #                                             in effect AFTER each stop
+    fault_wsv: Optional[jnp.ndarray] = None     # (W, NF) raw WS demand at
+    #                                             each stop (reclaim level)
 
 
 jax.tree_util.register_dataclass(
     PackedEventWorkloads,
     data_fields=["submit", "size", "runtime", "ws0", "ws_adjusts",
                  "rise_times", "rise_vals", "ws_integral", "ws_winmax",
-                 "ws_at_tick", "n_jobs"],
+                 "ws_at_tick", "n_jobs", "fault_times", "fault_failed",
+                 "fault_wsv"],
     meta_fields=[])
 
 
@@ -305,7 +316,8 @@ def _ws_fold_tables_ref(times: np.ndarray, values: np.ndarray,
 
 def ws_fold_tables_batch(times: np.ndarray, values: np.ndarray,
                          duration: float, policy: str, leases: np.ndarray,
-                         levels: np.ndarray
+                         levels: np.ndarray,
+                         failed: Optional[np.ndarray] = None
                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Vectorized WS fold tables over all (W, P) lanes at once.
 
@@ -331,6 +343,15 @@ def ws_fold_tables_batch(times: np.ndarray, values: np.ndarray,
 
     Windows past a point's horizon (``k > ceil(duration / L_p)``) are
     zero, exactly like the reference.
+
+    ``failed``, when given, is the concurrently-failed node count as a
+    step series on the SAME time axis (N,), shared by every lane — the
+    chaos tier's time-varying capacity. The FB share line becomes
+    ``min(ws, max(C - failed, 0))`` (the §5.1 WS-priority invariant the
+    event engine's ``on_fail`` maintains), which keeps the integral and
+    the window maxima exact under failures. FLB-NUB satisfies WS
+    elastically regardless of pool failures, so ``failed`` is rejected
+    there.
     """
     times = np.asarray(times, np.float64)
     values = np.asarray(values, np.float64)
@@ -342,8 +363,15 @@ def ws_fold_tables_batch(times: np.ndarray, values: np.ndarray,
     P = len(leases)
     edges = np.minimum(np.append(times[1:], duration), duration)
     widths = np.maximum(edges - np.minimum(times, duration), 0.0)   # (N,)
+    if failed is not None and policy != "fb":
+        raise ValueError("time-varying failed capacity is FB-only "
+                         "(FLB-NUB's WS share is elastic)")
     if policy == "fb":
-        share = np.minimum(values[:, None, :], levels[None, :, None])
+        cap = levels[None, :, None]
+        if failed is not None:
+            failed = np.asarray(failed, np.float64)
+            cap = np.maximum(cap - failed[None, None, :], 0.0)
+        share = np.minimum(values[:, None, :], cap)
     else:
         share = np.maximum(values[:, None, :] - levels[None, :, None],
                            0.0)                                 # (W, P, N)
@@ -396,7 +424,8 @@ def ws_fold_tables_batch(times: np.ndarray, values: np.ndarray,
 
 @functools.lru_cache(maxsize=256)
 def _fold_tables_cached(times_b: bytes, values_b: bytes, duration: float,
-                        policy: str, leases_b: bytes, levels_b: bytes
+                        policy: str, leases_b: bytes, levels_b: bytes,
+                        failed_b: bytes = b""
                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """One workload's fold tables, memoized on the trace identity (the
     raw change-point bytes), the policy and the grid's (leases, levels)
@@ -408,8 +437,9 @@ def _fold_tables_cached(times_b: bytes, values_b: bytes, duration: float,
     values = np.frombuffer(values_b, np.float64)
     leases = np.frombuffer(leases_b, np.float64)
     levels = np.frombuffer(levels_b, np.float64)
+    failed = np.frombuffer(failed_b, np.float64) if failed_b else None
     integral, winmax, at_tick = ws_fold_tables_batch(
-        times, values, duration, policy, leases, levels)
+        times, values, duration, policy, leases, levels, failed)
     out = (integral[0], winmax[0], at_tick[0])
     for a in out:
         a.flags.writeable = False
@@ -432,7 +462,7 @@ def pack_event_workloads(workloads: Sequence[Tuple[Sequence[Job],
                          duration: float, window: int, policy: str,
                          leases: Sequence[float], levels: Sequence[float],
                          dtype: Optional[np.dtype] = None,
-                         split: bool = False):
+                         split: bool = False, faults=None):
     """Pack ``(jobs, ws_trace)`` workloads into event-round arrays for
     one policy's sweep points.
 
@@ -446,13 +476,34 @@ def pack_event_workloads(workloads: Sequence[Tuple[Sequence[Job],
     shapes since they are padded together) cut on the host — the
     per-trace invocations of ``repro.sim.sweep`` consume these without
     slicing a device-resident pack per workload.
+
+    ``faults``, when given, is a per-workload sequence of
+    :class:`repro.sim.faults.FaultSchedule` (or ``None`` entries) —
+    FB only. Fault instants become loop stops (``fault_times`` /
+    ``fault_failed`` / ``fault_wsv``), and the fold tables are rebuilt
+    on the union of demand and fault change points with the FB share
+    line ``min(ws, max(C - failed(t), 0))``, so the WS integral and the
+    window maxima stay exact under failures. Demand-rise stops keep
+    coming from the original demand points.
     """
     dtype = resolve_pack_dtype(dtype)
+    if faults is not None and any(f is not None and len(f) for f in faults):
+        if policy != "fb":
+            raise ValueError(
+                "fault schedules are FB-only in the rounds engine; run "
+                "FLB-NUB faults through the event engine")
+        if len(faults) != len(workloads):
+            raise ValueError(
+                f"faults ({len(faults)}) must align with workloads "
+                f"({len(workloads)})")
+    else:
+        faults = None
     submit, size, runtime, n_jobs = pack_job_table(workloads, window, dtype)
     W = len(workloads)
     leases = np.asarray(leases, np.float64)
     levels = np.asarray(levels, np.float64)
     rises: List[Tuple[np.ndarray, np.ndarray]] = []
+    fault_tabs: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
     integrals, winmaxes, at_ticks = [], [], []
     ws0 = np.zeros(W, dtype)
     ws_adjusts = np.zeros(W, dtype)
@@ -465,10 +516,46 @@ def pack_event_workloads(workloads: Sequence[Tuple[Sequence[Job],
         ws_adjusts[w] = (len(times) - 1) + float(values[0] > 0)
         up = values[1:] > values[:-1]
         rises.append((times[1:][up], values[1:][up]))
+        fs = faults[w] if faults is not None else None
+        failed_b = b""
+        if fs is not None and len(fs):
+            # Mirror the site ledger's clamp (at most C nodes down at
+            # once; repairs revive only actually-failed nodes). The
+            # clamp recurrence depends on C, so a multi-level grid can
+            # only share one fault table when the clamp never binds.
+            if np.unique(levels).size == 1:
+                fs = fs.clamp(int(levels[0]))
+            elif fs.max_concurrent() > int(np.min(levels)):
+                raise ValueError(
+                    "fault schedule's concurrent failures exceed the "
+                    "smallest capacity level; the ledger clamp is "
+                    "per-capacity — pack one level at a time")
+        if fs is not None and len(fs):
+            f_t, f_n = fs.failed_series()
+            # Distinct fault instants inside the horizon, with the
+            # failed count in effect after all same-time events and the
+            # raw demand at that instant (the loop's reclaim level).
+            u_t = np.unique(f_t[f_t < duration])
+            u_n = np.concatenate([[0], f_n])[
+                np.searchsorted(f_t, u_t, "right")].astype(np.float64)
+            u_w = values[np.searchsorted(times, u_t, "right") - 1]
+            fault_tabs.append((u_t, u_n, u_w))
+            # Fold axis: the union of demand and fault change points,
+            # demand and failed resampled onto it.
+            m_t = np.union1d(times, u_t)
+            m_v = values[np.searchsorted(times, m_t, "right") - 1]
+            m_f = np.concatenate([[0.0], u_n])[
+                np.searchsorted(u_t, m_t, "right")]
+            fold_t, fold_v = m_t, m_v
+            failed_b = np.ascontiguousarray(m_f, np.float64).tobytes()
+        else:
+            fault_tabs.append((np.zeros(0), np.zeros(0), np.zeros(0)))
+            fold_t, fold_v = times, values
         integral, winmax, at_tick = _fold_tables_cached(
-            np.ascontiguousarray(times, np.float64).tobytes(),
-            np.ascontiguousarray(values, np.float64).tobytes(),
-            float(duration), policy, leases.tobytes(), levels.tobytes())
+            np.ascontiguousarray(fold_t, np.float64).tobytes(),
+            np.ascontiguousarray(fold_v, np.float64).tobytes(),
+            float(duration), policy, leases.tobytes(), levels.tobytes(),
+            failed_b)
         integrals.append(integral)
         winmaxes.append(winmax)
         at_ticks.append(at_tick)
@@ -485,6 +572,17 @@ def pack_event_workloads(workloads: Sequence[Tuple[Sequence[Job],
         ws_integral=np.stack(integrals).astype(dtype),
         ws_winmax=np.stack(winmaxes).astype(dtype),
         ws_at_tick=np.stack(at_ticks).astype(dtype), n_jobs=n_jobs)
+    if faults is not None:
+        nf = max(len(ft) for ft, _, _ in fault_tabs) + 1  # +inf sentinel
+        fault_times = np.full((W, nf), np.inf, dtype)
+        fault_failed = np.zeros((W, nf), dtype)
+        fault_wsv = np.zeros((W, nf), dtype)
+        for w, (f_t, f_n, f_w) in enumerate(fault_tabs):
+            fault_times[w, :len(f_t)] = f_t
+            fault_failed[w, :len(f_n)] = f_n
+            fault_wsv[w, :len(f_w)] = f_w
+        arrays.update(fault_times=fault_times, fault_failed=fault_failed,
+                      fault_wsv=fault_wsv)
     if split:
         return [PackedEventWorkloads(
             **{k: jnp.asarray(v[w:w + 1]) for k, v in arrays.items()})
@@ -536,6 +634,12 @@ def _lane_ctx(policy: str, prm: Dict, pk: PackedEventWorkloads) -> Dict:
     }
     if policy == "fb":
         ctx["C"] = prm["capacity"].astype(f)
+        if pk.fault_times is not None:
+            # Chaos tier: fault stop instants, the failed count after
+            # each, and the raw demand at each (pack enforces FB-only).
+            ctx["fault_times"] = pk.fault_times
+            ctx["fault_failed"] = pk.fault_failed
+            ctx["fault_wsv"] = pk.fault_wsv
     else:
         ctx["B"] = prm["B"].astype(f)
         ctx["lb_ws"] = prm["lb_ws"].astype(f)
@@ -618,6 +722,16 @@ def _round_body(policy: str, ctx: Dict, spec: RoundsSpec, carry, szcls):
                                  dur))
     if policy == "fb":
         b0 = jnp.minimum(b0, rise_times[rise_i])
+    faulted = "fault_times" in ctx
+    if faulted:
+        # Chaos tier: every fault instant is a stop (capacity changes
+        # there — kills and WS drains must replay at the exact time).
+        # Between stops the failed count, and therefore the effective
+        # capacity, is constant, which keeps the interval integration
+        # and the policy share exact.
+        ft = ctx["fault_times"]
+        fi = jnp.searchsorted(ft, t, side="right")
+        b0 = jnp.minimum(b0, ft[jnp.minimum(fi, ft.shape[0] - 1)])
     # --- submit skipping and the contended horizon. Empty queue:
     # if every submit in (t, b0] fits the currently-free capacity
     # in aggregate (free only grows inside the horizon; the
@@ -816,6 +930,19 @@ def _round_body(policy: str, ctx: Dict, spec: RoundsSpec, carry, szcls):
         rised = rise_times[rise_i] <= b
         wsv = jnp.where(rised, rise_vals[rise_i], wsv)
         rise_i = rise_i + rised.astype(jnp.int32)
+    if faulted:
+        # Effective capacity at b: failed count after the last fault
+        # event <= b. When the stop IS a fault instant, also sync the
+        # carried demand to its packed raw value — the event engine's
+        # on_fail sees the *current* demand (falls released WS nodes as
+        # they happened), while the carried wsv only tracks rises and
+        # ticks; without the sync a stale-high wsv would over-kill PBJ.
+        ffl, fwv = ctx["fault_failed"], ctx["fault_wsv"]
+        fib = jnp.searchsorted(ft, b, side="right")
+        fprev = jnp.maximum(fib - 1, 0)
+        failed_b = jnp.where(fib > 0, ffl[fprev], zero)
+        wsv = jnp.where((fib > 0) & (ft[fprev] == b), fwv[fprev], wsv)
+        ctx = dict(ctx, C=jnp.maximum(ctx["C"] - failed_b, zero))
     wsv = jnp.where(is_tick, ws_at_tick[win], wsv)
     owned, pool_pbj, run, starts, integrand, acc = _actions(
         policy, ctx, spec.ff_passes, owned, pool_pbj, run, used, queued,
@@ -915,6 +1042,13 @@ def _simulate_rounds(policy: str, prm: Dict, pk: PackedEventWorkloads,
     duration = spec.duration
     K = spec.window
     R = spec.compact_every
+    if spec.kernel == "pallas" and pk.fault_times is not None:
+        # The fused kernel's lane_inputs/ctx round-trip carries exactly
+        # the pre-fault context; keeping fault keys out of it preserves
+        # the kernel's bit-identity guarantee for every no-fault row.
+        raise NotImplementedError(
+            "fault injection is not supported by the fused pallas "
+            "round step; use kernel=\"xla\"")
     ctx = _lane_ctx(policy, prm, pk)
     tr_submit = ctx["tr_submit"]
     tr_size, tr_runtime = ctx["tr_size"], ctx["tr_runtime"]
@@ -1085,6 +1219,12 @@ def rounds_grids(fb: Optional[FBGrid], flb: Optional[FLBGrid],
     if devs is None:
         return _rounds_grids_single(fb, flb, fb_packed, flb_packed,
                                     fb_spec=fb_spec, flb_spec=flb_spec)
+    if ((fb_packed is not None and fb_packed.fault_times is not None)
+            or (flb_packed is not None
+                and flb_packed.fault_times is not None)):
+        raise NotImplementedError(
+            "fault-injected packs run single-device; the sharded lane "
+            "splitter predates the optional fault tables")
     out: Dict[str, Dict[str, jnp.ndarray]] = {}
     if fb_spec is not None:
         out["fb"] = sharded_grid_map(
@@ -1097,3 +1237,37 @@ def rounds_grids(fb: Optional[FBGrid], flb: Optional[FLBGrid],
             _rounds_prm_tree("flb_nub", flb), flb_packed,
             int(flb_packed.submit.shape[0]), int(flb.lease.shape[0]), devs)
     return out
+
+
+def fb_rounds_row(jobs: Sequence[Job], ws_trace: Sequence[Tuple[float, int]],
+                  capacity: int, lease_seconds: float, duration: float,
+                  faults=None, kernel: str = "xla",
+                  batch: int = DEFAULT_BATCH,
+                  dtype: Optional[np.dtype] = None) -> Dict[str, float]:
+    """One FB (capacity, lease) point through the rounds engine as a
+    plain scalar row — the single-point convenience the chaos
+    differential harness and ``benchmarks.run faults`` share. With
+    ``faults`` set, the schedule's stops fold into the horizon and the
+    effective capacity becomes ``max(C - failed(t), 0)`` (see
+    :func:`pack_event_workloads`)."""
+    n_faults = len(faults) if faults is not None else 0
+    spec = RoundsSpec(
+        duration=float(duration),
+        max_rounds=round_budget(len(jobs), len(list(ws_trace)),
+                                float(duration), float(lease_seconds))
+        + 8 * n_faults,   # each fault stop may kill + restart jobs
+        window=FB_ROUNDS_WINDOW, kernel=kernel, batch=batch)
+    pk = pack_event_workloads(
+        [(jobs, ws_trace)], float(duration), spec.window, "fb",
+        [float(lease_seconds)], [float(capacity)], dtype=dtype,
+        faults=[faults] if faults is not None else None)
+    f = pk.submit.dtype
+    fb = FBGrid(capacity=jnp.asarray([float(capacity)], f),
+                lease=jnp.asarray([float(lease_seconds)], f))
+    out = rounds_grids(fb, None, pk, None, fb_spec=spec)["fb"]
+    row = {k: float(np.asarray(v)[0, 0]) for k, v in out.items()}
+    for k in ("completed_jobs", "peak_nodes"):
+        row[k] = int(round(row[k]))
+    row["engine"] = "rounds"
+    row["system"] = "fb"
+    return row

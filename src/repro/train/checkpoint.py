@@ -35,6 +35,15 @@ PyTree = Any
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
 
+class TornCheckpointError(IOError):
+    """A checkpoint directory is incomplete or corrupt — torn by a crash
+    mid-write, partial storage loss, or bit rot (CRC mismatch).
+    ``restore`` raises this instead of the raw IO/parse error so callers
+    can tell "this step is damaged, try an older one"
+    (:meth:`Checkpointer.restore_latest`) apart from programming errors
+    like restoring into a template of the wrong structure."""
+
+
 def _flatten_with_paths(tree: PyTree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
@@ -136,10 +145,17 @@ class Checkpointer:
                 specs: Optional[PyTree] = None,
                 verify: bool = True) -> Tuple[PyTree, Dict]:
         """Restore into the structure of ``template``; if mesh+specs are
-        given, leaves are placed with the *target* sharding (reshard)."""
+        given, leaves are placed with the *target* sharding (reshard).
+        A torn directory — unreadable/unparsable manifest, missing leaf
+        blob or manifest entry, checksum mismatch — raises
+        :class:`TornCheckpointError`."""
         d = os.path.join(self.directory, f"step_{step}")
-        with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
-            manifest = msgpack.unpackb(f.read())
+        try:
+            with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+                manifest = msgpack.unpackb(f.read())
+        except (OSError, msgpack.UnpackException, ValueError) as e:
+            raise TornCheckpointError(
+                f"step {step}: unreadable manifest ({e})") from e
         by_path = {e["path"]: e for e in manifest["leaves"]}
         paths, leaves, treedef = _flatten_with_paths(template)
         spec_leaves = None
@@ -147,15 +163,44 @@ class Checkpointer:
             spec_leaves = treedef.flatten_up_to(specs)
         out = []
         for i, (path, tmpl) in enumerate(zip(paths, leaves)):
-            entry = by_path[path]
-            arr = np.load(os.path.join(d, entry["file"]))
+            entry = by_path.get(path)
+            if entry is None:
+                raise TornCheckpointError(
+                    f"step {step}: leaf {path!r} missing from manifest")
+            try:
+                arr = np.load(os.path.join(d, entry["file"]))
+            except (OSError, ValueError) as e:
+                raise TornCheckpointError(
+                    f"step {step}: unreadable leaf {path!r} ({e})") from e
             if verify:
                 crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
                 if crc != entry["crc32"]:
-                    raise IOError(f"checksum mismatch for {path}")
+                    raise TornCheckpointError(
+                        f"step {step}: checksum mismatch for {path}")
             if mesh is not None and spec_leaves is not None:
                 from jax.sharding import NamedSharding
                 arr = jax.device_put(arr,
                                      NamedSharding(mesh, spec_leaves[i]))
             out.append(arr)
         return treedef.unflatten(out), manifest["metadata"]
+
+    def restore_latest(self, template: PyTree, mesh=None,
+                       specs: Optional[PyTree] = None,
+                       verify: bool = True
+                       ) -> Optional[Tuple[PyTree, Dict, int]]:
+        """Restore the newest *intact* checkpoint: torn steps (crash
+        mid-write that beat the atomic rename, damaged blobs) are
+        reported via ``warnings.warn`` and skipped, walking backwards
+        until one verifies. Returns ``(tree, metadata, step)``, or
+        ``None`` when no restorable checkpoint exists — exactly the
+        restart semantics the chaos tier's checkpoint-restart path
+        needs (a failure can never wedge a job on a torn file)."""
+        import warnings
+        for step in reversed(self.all_steps()):
+            try:
+                tree, meta = self.restore(step, template, mesh=mesh,
+                                          specs=specs, verify=verify)
+                return tree, meta, step
+            except TornCheckpointError as e:
+                warnings.warn(f"skipping torn checkpoint: {e}")
+        return None

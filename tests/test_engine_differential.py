@@ -36,9 +36,9 @@ import numpy as np
 import pytest
 
 from repro.core.jobs import Job
-from repro.sim.contracts import (CONTRACTS, LIVE_CONTRACT,
-                                 ROUNDS_CONTRACT, SCAN_CONTRACT,
-                                 check_fidelity)
+from repro.sim.contracts import (CONTRACTS, FAULT_CONTRACT,
+                                 LIVE_CONTRACT, ROUNDS_CONTRACT,
+                                 SCAN_CONTRACT, check_fidelity)
 from repro.sim.sweep import ScanOptions, SweepPoint, run_sweep
 
 pytestmark = pytest.mark.tier1
@@ -316,9 +316,9 @@ def test_bench_gate_uses_the_contract_table():
 
 def test_contract_table_values():
     """The documented bands: scan 2 %/15 %/15 %, rounds exact/5 %/5 %,
-    live exact/10 %/10 % plus the 25 % demand-drift bounds.
-    A change here is a contract change — update README and the bench
-    note in the same commit."""
+    live exact/10 %/10 % plus the 25 % demand-drift bounds, faults
+    ±2-jobs-or-2 %/2 %/2 %. A change here is a contract change — update
+    README and the bench note in the same commit."""
     assert SCAN_CONTRACT.completed_rel == 0.02
     assert SCAN_CONTRACT.node_hours_rel == 0.15
     assert SCAN_CONTRACT.peak_rel == 0.15
@@ -331,7 +331,13 @@ def test_contract_table_values():
     assert LIVE_CONTRACT.peak_rel == 0.10
     assert LIVE_CONTRACT.demand_mae_rel == 0.25
     assert LIVE_CONTRACT.demand_peak_rel == 0.25
-    assert set(CONTRACTS) == {"scan", "rounds", "vectorized", "live"}
+    assert not FAULT_CONTRACT.completed_exact
+    assert FAULT_CONTRACT.completed_abs == 2
+    assert FAULT_CONTRACT.completed_rel == 0.02
+    assert FAULT_CONTRACT.node_hours_rel == 0.02
+    assert FAULT_CONTRACT.peak_rel == 0.02
+    assert set(CONTRACTS) == {"scan", "rounds", "vectorized", "live",
+                              "faults"}
 
 
 def test_check_fidelity_flags_violations():
