@@ -104,3 +104,24 @@ class EC2RightScaleSystem(ProvisioningSystem):
             self.cluster.release(t, self.pbj.name, n)
             self.pbj.owned -= n
         return []
+
+
+def billable_requests(row) -> int:
+    """Provisioning-API request count a sweep row implies — the unit the
+    capacity layer's cost lens (``repro.sim.capacity.CostModel``) prices
+    at a provider's per-request rate.
+
+    Every ``adjust_events`` entry is one allocate/release transition of
+    the site ledger: under §6.6.2's whole-lease-unit billing each such
+    transition is one management-API round-trip on a public cloud
+    (RunInstances/TerminateInstances-shaped), so the ledger count IS the
+    billable request count. Accepts a sweep row dict or any object with
+    an ``adjust_events`` attribute (e.g. ``SimResult``); rows without
+    the metric (vectorized DCS carries cost/peak only — a static
+    partition makes zero requests) price as zero.
+    """
+    if isinstance(row, dict):
+        n = row.get("adjust_events", 0)
+    else:
+        n = getattr(row, "adjust_events", 0)
+    return int(n or 0)

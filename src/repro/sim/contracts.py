@@ -41,8 +41,9 @@ from __future__ import annotations
 import dataclasses
 
 __all__ = ["EngineContract", "LiveContract", "FaultContract",
-           "SCAN_CONTRACT", "ROUNDS_CONTRACT", "VECTORIZED_CONTRACT",
-           "LIVE_CONTRACT", "FAULT_CONTRACT", "CONTRACTS",
+           "HeadlineContract", "SCAN_CONTRACT", "ROUNDS_CONTRACT",
+           "VECTORIZED_CONTRACT", "LIVE_CONTRACT", "FAULT_CONTRACT",
+           "HEADLINE_CONTRACT", "CONTRACTS",
            "check_fidelity", "demand_drift", "no_lost_jobs"]
 
 
@@ -201,6 +202,53 @@ def no_lost_jobs(jobs, system) -> list:
     return violations
 
 
+@dataclasses.dataclass(frozen=True)
+class HeadlineContract:
+    """Bands for the §6 headline numbers *as query outputs* — the
+    capacity layer (``repro.sim.capacity.headline_queries``) answers the
+    paper's two claims as optimization queries and this contract states
+    how far the answers may sit from the paper.
+
+    ``config_reduction``: §6.5.3 / Fig. 13 — the private-cloud FB system
+    needs a ≈40 % smaller cluster configuration than DCS at the same
+    completed-job throughput. The reproduction's moment-matched
+    iPSC/860 + WorldCup'98 pair measures 0.473 (min feasible C = 135 vs
+    the DCS size 256). The floor is the paper's own claim — the query
+    must demonstrate AT LEAST the 40 % saving — and the ceiling guards
+    against a degenerate workload making the query trivially easy.
+
+    ``peak_reduction``: §6.6.3 — FLB-NUB's peak resource consumption is
+    "up to 31 %" lower than the EC2+RightScale baseline. Measured 0.386
+    on the iPSC pair and 0.337 on NASA BLUE. The floor is the paper's
+    31 % minus the rounds engine's 5 % peak band (0.31 · 0.95 ≈ 0.29,
+    rounded down to 0.28); the ceiling is a sanity bound.
+    """
+
+    config_reduction_lo: float = 0.40
+    config_reduction_hi: float = 0.55
+    peak_reduction_lo: float = 0.28
+    peak_reduction_hi: float = 0.45
+
+    def check(self, config_reduction: float,
+              peak_reduction: float) -> list:
+        """Returns violation strings (empty = both §6 numbers land in
+        band)."""
+        violations = []
+        if not (self.config_reduction_lo <= config_reduction
+                <= self.config_reduction_hi):
+            violations.append(
+                f"config_reduction {config_reduction:.4f} outside "
+                f"[{self.config_reduction_lo}, {self.config_reduction_hi}]"
+                f" (§6.5.3 claims ≈40 %)")
+        if not (self.peak_reduction_lo <= peak_reduction
+                <= self.peak_reduction_hi):
+            violations.append(
+                f"peak_reduction {peak_reduction:.4f} outside "
+                f"[{self.peak_reduction_lo}, {self.peak_reduction_hi}]"
+                f" (§6.6.3 claims up to 31 %)")
+        return violations
+
+
 SCAN_CONTRACT = EngineContract(completed_rel=0.02, node_hours_rel=0.15,
                                peak_rel=0.15)
 ROUNDS_CONTRACT = EngineContract(completed_rel=0.0, node_hours_rel=0.05,
@@ -225,14 +273,19 @@ LIVE_CONTRACT = LiveContract(completed_rel=0.0, node_hours_rel=0.10,
 # LIVE_CONTRACT's exact-completion check — no separate band.
 FAULT_CONTRACT = FaultContract(completed_rel=0.02, node_hours_rel=0.02,
                                peak_rel=0.02, completed_abs=2)
+# The §6 headline numbers as capacity-query outputs — gated by
+# tests/test_capacity.py and ``benchmarks.run capacity``.
+HEADLINE_CONTRACT = HeadlineContract()
 
-# Keyed by the ``engine`` tag run_sweep puts on each row.
+# Keyed by the ``engine`` tag run_sweep puts on each row; "queries"
+# keys the capacity layer's headline gate.
 CONTRACTS = {
     "scan": SCAN_CONTRACT,
     "rounds": ROUNDS_CONTRACT,
     "vectorized": VECTORIZED_CONTRACT,
     "live": LIVE_CONTRACT,
     "faults": FAULT_CONTRACT,
+    "queries": HEADLINE_CONTRACT,
 }
 
 

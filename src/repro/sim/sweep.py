@@ -419,10 +419,16 @@ def _assemble_rows(points: List[SweepPoint], fb_idx: List[int],
     return per_workload                           # type: ignore[return-value]
 
 
-def _warn_diagnostics(per_workload: List[List[Dict]], engine: str) -> None:
+def _warn_diagnostics(per_workload: List[List[Dict]], engine: str,
+                      stacklevel: int = 3) -> None:
     """Surface lane diagnostics: a backlog that outgrew the job window
     (results silently degrade — jobs start late or never) or a lane
-    that exhausted its round budget. Callers also get both per row."""
+    that exhausted its round budget. Callers also get both per row.
+
+    ``stacklevel`` must resolve to the frame OUTSIDE the sweep library —
+    the entry points thread the extra wrapper depth through
+    ``warn_stacklevel`` / ``_stack_offset`` so ``-W error`` reports and
+    warning filters name the caller's file, not this module."""
     overflowed = [r["system"] for rows in per_workload for r in rows
                   if r is not None and r.get("window_overflow", 0) > 0]
     if overflowed:
@@ -430,7 +436,7 @@ def _warn_diagnostics(per_workload: List[List[Dict]], engine: str) -> None:
             f"{engine} sweep: job backlog outgrew the lane window on "
             f"{len(overflowed)} row(s) ({', '.join(sorted(set(overflowed)))}"
             f"); metrics under-report queued work — raise "
-            f"ScanOptions.window", RuntimeWarning, stacklevel=3)
+            f"ScanOptions.window", RuntimeWarning, stacklevel=stacklevel)
     truncated = [r["system"] for rows in per_workload for r in rows
                  if r is not None and r.get("truncated", 0) > 0]
     if truncated:
@@ -438,7 +444,7 @@ def _warn_diagnostics(per_workload: List[List[Dict]], engine: str) -> None:
             f"{engine} sweep: round budget exhausted before the horizon "
             f"on {len(truncated)} row(s) "
             f"({', '.join(sorted(set(truncated)))})", RuntimeWarning,
-            stacklevel=3)
+            stacklevel=stacklevel)
 
 
 def _pack_scan(points: List[SweepPoint],
@@ -476,7 +482,8 @@ def _sweep_scan(points: List[SweepPoint],
                 workloads: Sequence[Tuple[Sequence[Job],
                                           Sequence[Tuple[float, int]]]],
                 duration: float,
-                options: ScanOptions) -> List[List[Dict]]:
+                options: ScanOptions,
+                warn_stacklevel: int = 3) -> List[List[Dict]]:
     """FB and FLB-NUB points through the batched ``lax.scan`` fast path.
 
     Returns one row list per workload, each aligned with ``points``
@@ -494,7 +501,7 @@ def _sweep_scan(points: List[SweepPoint],
     out = jax.tree_util.tree_map(np.asarray, out)
     rows = _assemble_rows(points, fb_idx, flb_idx, out, len(workloads),
                           "scan")
-    _warn_diagnostics(rows, "scan")
+    _warn_diagnostics(rows, "scan", stacklevel=warn_stacklevel)
     return rows
 
 
@@ -535,7 +542,8 @@ def _sweep_rounds(points: List[SweepPoint],
                   workloads: Sequence[Tuple[Sequence[Job],
                                             Sequence[Tuple[float, int]]]],
                   duration: float,
-                  options: ScanOptions) -> List[List[Dict]]:
+                  options: ScanOptions,
+                  warn_stacklevel: int = 3) -> List[List[Dict]]:
     """FB and FLB-NUB points through the event-round fast path
     (``repro.sim.rounds``): adaptive jump-to-next-event steps with
     exact completions, batched over sweep points like the scan.
@@ -566,7 +574,7 @@ def _sweep_rounds(points: List[SweepPoint],
            for kind in outs[0]}
     rows = _assemble_rows(points, fb_idx, flb_idx, out, len(workloads),
                           "rounds")
-    _warn_diagnostics(rows, "rounds")
+    _warn_diagnostics(rows, "rounds", stacklevel=warn_stacklevel)
     return rows
 
 
@@ -608,7 +616,8 @@ def _pack_scenarios_grids(points: List[SweepPoint], grid,
 
 def _sweep_rounds_generated(points: List[SweepPoint], grid,
                             options: ScanOptions,
-                            synth=None) -> List[List[Dict]]:
+                            synth=None,
+                            warn_stacklevel: int = 3) -> List[List[Dict]]:
     """FB / FLB-NUB points over a generated scenario batch
     (:class:`repro.sim.scenarios.ScenarioGrid`) through the event-round
     engine. Unlike :func:`_sweep_rounds`'s per-trace invocations (2-3
@@ -630,7 +639,7 @@ def _sweep_rounds_generated(points: List[SweepPoint], grid,
     out = jax.tree_util.tree_map(np.asarray, out)
     rows = _assemble_rows(points, fb_idx, flb_idx, out, grid.n_lanes,
                           "rounds")
-    _warn_diagnostics(rows, "rounds")
+    _warn_diagnostics(rows, "rounds", stacklevel=warn_stacklevel)
     return rows
 
 
@@ -685,7 +694,7 @@ def run_sweep(points: Sequence[SweepPoint], jobs: Sequence[Job],
     return run_sweep_workloads(points, [(jobs, ws_trace)], duration,
                                vectorize=vectorize, mode=mode,
                                scan_options=scan_options,
-                               devices=devices)[0]
+                               devices=devices, _stack_offset=1)[0]
 
 
 def run_sweep_workloads(points: Sequence[SweepPoint],
@@ -695,7 +704,8 @@ def run_sweep_workloads(points: Sequence[SweepPoint],
                         vectorize: bool = True,
                         mode: Optional[str] = None,
                         scan_options: ScanOptions = ScanOptions(),
-                        devices: compat.Devices = None
+                        devices: compat.Devices = None,
+                        _stack_offset: int = 0
                         ) -> List[List[Dict]]:
     """Evaluate a sweep grid over SEVERAL workload traces at once.
 
@@ -716,8 +726,19 @@ def run_sweep_workloads(points: Sequence[SweepPoint],
     engine as a single (W × P) program (sharded across
     ``devices`` when set); only FB / FLB-NUB points are supported and
     the grid fixes the horizon (``duration`` must stay ``None``).
+
+    ``_stack_offset`` (private) is the number of wrapper frames between
+    the user's call site and this function; diagnostic
+    ``RuntimeWarning``\\ s use it to attribute the warning to the
+    caller's file instead of the sweep internals. Wrappers that forward
+    here (``run_sweep``, ``warmup_sweep``, the capacity query layer)
+    each add their own frame count.
     """
     mode = _resolve_mode(mode, vectorize)
+    # warnings.warn stack depth from inside _warn_diagnostics:
+    # 1 = _warn_diagnostics, 2 = _sweep_*, 3 = this function,
+    # 4 = our caller — plus any wrapper frames above us.
+    warn_stacklevel = 4 + _stack_offset
     if devices is not None:
         scan_options = dataclasses.replace(scan_options, devices=devices)
     from repro.sim import scenarios as scenarioslib
@@ -741,7 +762,8 @@ def run_sweep_workloads(points: Sequence[SweepPoint],
                 f"only, got {bad}; evaluate DCS/EC2 baselines on "
                 f"sampled lanes (repro.sim.scenarios.sample_workloads)")
         return _sweep_rounds_generated(list(points), workloads,
-                                       scan_options)
+                                       scan_options,
+                                       warn_stacklevel=warn_stacklevel)
     if duration is None:
         duration = max(default_duration(jobs, ws) for jobs, ws in workloads)
     rows: List[List[Optional[Dict]]] = [
@@ -775,7 +797,8 @@ def run_sweep_workloads(points: Sequence[SweepPoint],
         fast = _sweep_scan if mode == "scan" else _sweep_rounds
         if batch_idx:
             fast_rows = fast([points[i] for i in batch_idx],
-                             workloads, duration, scan_options)
+                             workloads, duration, scan_options,
+                             warn_stacklevel=warn_stacklevel)
             for w in range(len(workloads)):
                 for j, i in enumerate(batch_idx):
                     rows[w][i] = fast_rows[w][j]
@@ -816,7 +839,8 @@ def warmup_sweep(points: Sequence[SweepPoint],
     """
     t0 = time.time()
     run_sweep_workloads(points, workloads, duration, mode=mode,
-                        scan_options=scan_options, devices=devices)
+                        scan_options=scan_options, devices=devices,
+                        _stack_offset=1)
     return time.time() - t0
 
 

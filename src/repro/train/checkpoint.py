@@ -202,5 +202,8 @@ class Checkpointer:
                                           specs=specs, verify=verify)
                 return tree, meta, step
             except TornCheckpointError as e:
-                warnings.warn(f"skipping torn checkpoint: {e}")
+                # stacklevel=2: attribute the skip to restore_latest's
+                # caller, not this loop body.
+                warnings.warn(f"skipping torn checkpoint: {e}",
+                              stacklevel=2)
         return None

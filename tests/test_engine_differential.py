@@ -317,8 +317,10 @@ def test_bench_gate_uses_the_contract_table():
 def test_contract_table_values():
     """The documented bands: scan 2 %/15 %/15 %, rounds exact/5 %/5 %,
     live exact/10 %/10 % plus the 25 % demand-drift bounds, faults
-    ±2-jobs-or-2 %/2 %/2 %. A change here is a contract change — update
-    README and the bench note in the same commit."""
+    ±2-jobs-or-2 %/2 %/2 %, queries' §6 headline bands 40–55 %/28–45 %
+    (pinned value-by-value in test_capacity.py). A change here is a
+    contract change — update README and the bench note in the same
+    commit."""
     assert SCAN_CONTRACT.completed_rel == 0.02
     assert SCAN_CONTRACT.node_hours_rel == 0.15
     assert SCAN_CONTRACT.peak_rel == 0.15
@@ -337,7 +339,7 @@ def test_contract_table_values():
     assert FAULT_CONTRACT.node_hours_rel == 0.02
     assert FAULT_CONTRACT.peak_rel == 0.02
     assert set(CONTRACTS) == {"scan", "rounds", "vectorized", "live",
-                              "faults"}
+                              "faults", "queries"}
 
 
 def test_check_fidelity_flags_violations():
